@@ -1,0 +1,135 @@
+"""Roofline analysis from the dry-run's compiled artifacts (§Roofline).
+
+Per (arch x shape x mesh):
+    compute term    = HLO_FLOPs / (chips x 197 TFLOP/s)
+    memory term     = HLO_bytes / (chips x 819 GB/s)
+    collective term = collective_bytes / (chips x 4 x 50 GB/s links)
+FLOPs/bytes/collective bytes come from the trip-count-aware HLO analyzer
+(per-device numbers; see repro/launch/hlo_analysis.py).  MODEL_FLOPS is the
+analytic 6*N_active*D (train) / 2*N_active*D (inference) budget.
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+ICI_LINKS = 4
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load_cells(results_dir=RESULTS, mesh="pod16x16", tag=""):
+    cells = []
+    for f in sorted(glob.glob(str(results_dir / "*.json"))):
+        r = json.load(open(f))
+        if r.get("mesh") != mesh or r.get("tag", "") != tag:
+            continue
+        cells.append(r)
+    return cells
+
+
+def model_min_bytes(rec: dict) -> float:
+    """Analytic minimum HBM traffic per device per step.
+
+    train:   read params + write grads + opt update (r/w) + activation
+             checkpoints written+read once       ≈ 6*P/n + 4*A/n
+    prefill: read params once + write KV cache   ≈ 2*P/n + C/n
+    decode:  read ALL resident params + the whole KV cache once
+             (the defining decode bound)         ≈ (2*P + C)/n
+    P = active params (weights bf16), A = per-layer residual checkpoints,
+    C = cache bytes.  Sharding divides by n devices.
+    """
+    from repro.configs import SHAPES, get_config
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    n = rec["n_devices"]
+    P = cfg.n_params() * 2                       # resident weight bytes
+    P_active = cfg.n_active_params() * 2
+    tokens = shape.global_batch * shape.seq_len
+    A = tokens * cfg.d_model * 2 * cfg.n_layers  # residual checkpoints
+    # cache bytes (decode): per assigned shape
+    if cfg.mla is not None:
+        per_tok = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim
+    else:
+        per_tok = 2 * cfg.n_kv_heads * cfg.resolved_head_dim
+        if cfg.window:
+            pass
+    kv_len = min(shape.seq_len, cfg.window or shape.seq_len)
+    C = shape.global_batch * kv_len * per_tok * 2 * cfg.n_layers
+    if shape.kind == "train":
+        return (6 * P + 4 * A) / n
+    if shape.kind == "prefill":
+        return (2 * P + C) / n
+    return (P_active + P + C) / n
+
+
+def roofline_terms(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    h = rec["hlo"]
+    n = rec["n_devices"]
+    t_comp = h["flops_per_device"] / PEAK_FLOPS
+    t_mem = h["bytes_per_device"] / HBM_BW
+    coll = sum(h["collective_bytes"].values())
+    t_coll = coll / (ICI_BW * ICI_LINKS)
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    bound = max(terms, key=terms.get)
+    model_flops = rec.get("model_flops", 0.0)
+    hlo_global = h["flops_per_device"] * n
+    # the ideal step: whichever of analytic-compute / analytic-memory binds
+    ideal = max(model_flops / n / PEAK_FLOPS,
+                model_min_bytes(rec) / HBM_BW)
+    achieved = max(max(terms.values()), 1e-12)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        **terms,
+        "bound": bound,
+        "step_s_lower_bound": achieved,
+        "ideal_step_s": ideal,
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_global,
+        "useful_frac": (model_flops / hlo_global) if hlo_global else 0.0,
+        "roofline_frac": ideal / achieved,
+        "peak_gib": rec["memory"]["peak_bytes_per_device"] / 2**30,
+    }
+
+
+def table(results_dir=RESULTS, mesh="pod16x16", tag="") -> list[dict]:
+    out = []
+    for rec in load_cells(results_dir, mesh, tag):
+        if rec["status"] == "skipped":
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "mesh": rec["mesh"], "bound": rec["reason"]})
+            continue
+        t = roofline_terms(rec)
+        if t:
+            out.append(t)
+    return out
+
+
+def fmt_row(t: dict) -> str:
+    if "compute_s" not in t:
+        return (f"{t['arch']:22s} {t['shape']:12s} {t['bound']}")
+    return (f"{t['arch']:22s} {t['shape']:12s} "
+            f"comp {t['compute_s']:9.3e}  mem {t['memory_s']:9.3e}  "
+            f"coll {t['collective_s']:9.3e}  [{t['bound'][:-2]:10s}] "
+            f"useful {100*t['useful_frac']:5.1f}%  "
+            f"roofline {100*t['roofline_frac']:5.1f}%  "
+            f"peak {t['peak_gib']:6.2f}GiB")
+
+
+def main():
+    print("name,us_per_call,derived")
+    for t in table():
+        if "compute_s" in t:
+            print(f"roofline/{t['arch']}/{t['shape']},"
+                  f"{t['step_s_lower_bound']*1e6:.1f},"
+                  f"bound={t['bound']};roofline_frac={t['roofline_frac']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

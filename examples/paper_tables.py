@@ -1,0 +1,29 @@
+"""Reproduce the paper's quantitative artifacts in one go:
+Fig. 1 sweep, Fig. 4 per-network comparison, Table I gains — plus the
+beyond-paper budgeted partitioner.
+
+    PYTHONPATH=src python examples/paper_tables.py
+"""
+from benchmarks.run import (beyond_paper, fig1_conv_sweep, fig4_models,
+                            table1_gains)
+
+
+def main():
+    print("== Fig.1: conv sweep on 224x224x3 (us / mJ) ==")
+    rows = fig1_conv_sweep()
+    for (name, us, derived) in rows:
+        if "n64" in name or "n8/" in name:
+            print(f"  {name:28s} {us:8.1f}us  {derived}")
+    print("\n== Fig.4: network-level hetero vs GPU-only ==")
+    for (name, us, derived) in fig4_models():
+        print(f"  {name:32s} {us/1e3:8.2f}ms  {derived}")
+    print("\n== Table I: module-family gains vs paper ==")
+    for (name, _us, derived) in table1_gains():
+        print(f"  {name:24s} {derived}")
+    print("\n== Beyond paper: budgeted all-scheme partitioner ==")
+    for (name, us, derived) in beyond_paper():
+        print(f"  {name:24s} {us/1e3:8.2f}ms  {derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Serve a small model with batched requests through the slot scheduler
+(prefill + lockstep decode, continuous-batching style).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch llama3-8b
+"""
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--requests", type=int, default=4)
+    args = ap.parse_args()
+    outputs = serve_main(["--arch", args.arch,
+                          "--requests", str(args.requests),
+                          "--prompt-len", "12", "--gen", "24"])
+    for rid, toks in outputs.items():
+        print(f"request {rid}: generated {len(toks)} tokens: {toks[:10]}...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.configs.base import (  # noqa: F401
+    ASSIGNED_ARCHS, SHAPES, CNNConfig, MLAConfig, MoEConfig, ModelConfig,
+    ShapeSpec, ShardingPolicy, cell_applicable, get_cnn_config, get_config,
+    list_archs, list_cnns, reduced, register, register_cnn,
+)

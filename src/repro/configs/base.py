@@ -1,0 +1,308 @@
+"""Config system: model configs, input shapes, sharding policies, registry.
+
+Every assigned architecture is a ``ModelConfig`` registered under its id and
+selectable via ``--arch <id>`` in the launchers.  The paper's own CNN
+workloads (SqueezeNet / MobileNetV2 / ShuffleNetV2) are ``CNNConfig``s used by
+the heterogeneous-partitioning reproduction path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+
+# ---------------------------------------------------------------------------
+# Sub-configs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_routed: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    d_ff_shared: int = 0
+    first_dense_layers: int = 0       # leading layers use a dense FFN
+    d_ff_dense: int = 0               # width of those dense FFNs
+    capacity_factor: float = 2.0
+    router_aux_coef: float = 0.001
+    # expert-parallel axes ("model",) or ("data", "model"); dispatch strategy
+    ep_axes: tuple[str, ...] = ("model",)
+    dispatch: str = "ep"              # "ep" (shard_map all_to_all) | "dense"
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-style Multi-head Latent Attention dims."""
+    q_lora_rank: int
+    kv_lora_rank: int
+    qk_nope_dim: int
+    qk_rope_dim: int
+    v_head_dim: int
+
+
+@dataclass(frozen=True)
+class ShardingPolicy:
+    """How a config maps onto the (pod, data, model) mesh."""
+    fsdp: bool = False                # shard weights over the data axis too
+    seq_parallel: bool = True         # residual stream sharded over data x model
+    remat: str = "block"              # "none" | "block" — per-layer rematerialisation
+    shard_vocab: bool = True
+    kv_replicated: bool = False       # replicate KV heads instead of (padded) sharding
+    # mesh axes carrying the batch dim; tiny models fold "model" in (pure DP)
+    batch_axes: tuple[str, ...] = ("pod", "data")
+    # train/prefill: expand GQA KV to full head count before attention so the
+    # head dim shards evenly over the model axis (kills the padded-Kh
+    # reshard/replicate churn inside chunked attention; KV mem is tiny there).
+    # Default ON after §Perf cell 1 (llama3-8b train: 6.7x collective cut).
+    gqa_expand_kv: bool = True
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                        # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                  # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    attn_impl: str = "chunked"         # "chunked" | "full" | "local"
+    window: Optional[int] = None       # sliding-window size for local attention
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    # Hybrid / SSM block pattern, tiled over layers, e.g. ("R","R","A") for
+    # recurrentgemma, ("m",)*7+("s",) for xlstm.  None -> all attention.
+    block_pattern: Optional[tuple[str, ...]] = None
+    rnn_width: int = 0                 # RG-LRU recurrent width (recurrentgemma)
+    # Encoder-decoder (seamless-m4t): n_layers is the DECODER depth.
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+    enc_ratio: int = 4                 # enc_len = seq_len // enc_ratio
+    # VLM: number of prepended image-patch embeddings (stub frontend).
+    vlm_patches: int = 0
+    policy: ShardingPolicy = field(default_factory=ShardingPolicy)
+    optimizer: str = "adamw"           # "adamw" | "adafactor"
+    dtype: str = "bfloat16"
+    # attention logits soft cap (gemma-style), 0 = off
+    attn_logit_softcap: float = 0.0
+    # embedding rows padded to a multiple of this so the vocab dim shards
+    # evenly over a 16-way model axis (padded logits masked to -inf)
+    vocab_pad_to: int = 128
+
+    @property
+    def padded_vocab(self) -> int:
+        p = self.vocab_pad_to
+        return -(-self.vocab // p) * p
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def pattern_at(self, i: int) -> str:
+        if self.block_pattern is None:
+            return "A"
+        return self.block_pattern[i % len(self.block_pattern)]
+
+    def layer_kinds(self) -> list[str]:
+        return [self.pattern_at(i) for i in range(self.n_layers)]
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if the arch can run 500k-token decode (no full attention)."""
+        if self.block_pattern is None and self.window is None:
+            return False
+        kinds = set(self.layer_kinds())
+        if "A" in kinds and self.window is None:
+            return False
+        return True
+
+    def n_params(self) -> int:
+        """Approximate parameter count (embedding + blocks + head)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        total = self.vocab * d * (1 if self.tie_embeddings else 2)
+        for i in range(self.n_layers):
+            kind = self.pattern_at(i)
+            if kind in ("A",):
+                if self.mla is not None:
+                    m = self.mla
+                    total += d * m.q_lora_rank + m.q_lora_rank * self.n_heads * (m.qk_nope_dim + m.qk_rope_dim)
+                    total += d * (m.kv_lora_rank + m.qk_rope_dim)
+                    total += m.kv_lora_rank * self.n_heads * (m.qk_nope_dim + m.v_head_dim)
+                    total += self.n_heads * m.v_head_dim * d
+                else:
+                    total += d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+            elif kind == "R":      # RG-LRU block (qkv-free)
+                w = self.rnn_width or d
+                total += 2 * d * w + w * d + 3 * w  # in-proj x2, out-proj, gates
+            elif kind in ("m", "s"):   # xLSTM blocks
+                total += 8 * d * d    # rough: proj up/down + gates
+            # FFN
+            if self.moe is not None and kind != "s":
+                if i < self.moe.first_dense_layers:
+                    total += 3 * d * self.moe.d_ff_dense
+                else:
+                    total += self.moe.n_routed * 3 * d * self.moe.d_ff_expert
+                    total += self.moe.n_shared * 3 * d * self.moe.d_ff_shared
+                    total += d * self.moe.n_routed
+            elif self.d_ff:
+                total += 3 * d * self.d_ff
+        if self.enc_dec:
+            # encoder blocks + decoder cross-attention
+            total += self.n_enc_layers * (4 * d * self.n_heads * hd + 3 * d * self.d_ff)
+            total += self.n_layers * 4 * d * self.n_heads * hd
+        return int(total)
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: only routed top-k + shared)."""
+        if self.moe is None:
+            return self.n_params()
+        m = self.moe
+        total = self.n_params()
+        moe_layers = self.n_layers - m.first_dense_layers
+        total -= moe_layers * m.n_routed * 3 * self.d_model * m.d_ff_expert
+        total += moe_layers * m.top_k * 3 * self.d_model * m.d_ff_expert
+        return int(total)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned): every LM arch is paired with these four shapes.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k":    ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k":  ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k":   ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Whether (arch x shape) is a runnable dry-run cell, else reason."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "skipped(full-attention: quadratic at 524288)"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# CNN configs (paper workloads)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    width_mult: float = 1.0
+    num_classes: int = 1000
+    image_size: int = 224
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, ModelConfig] = {}
+_CNN_REGISTRY: dict[str, CNNConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def register_cnn(cfg: CNNConfig) -> CNNConfig:
+    _CNN_REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    _ensure_loaded()
+    return _REGISTRY[name]
+
+
+def get_cnn_config(name: str) -> CNNConfig:
+    _ensure_loaded()
+    return _CNN_REGISTRY[name]
+
+
+def list_archs() -> list[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def list_cnns() -> list[str]:
+    _ensure_loaded()
+    return sorted(_CNN_REGISTRY)
+
+
+def reduced(cfg: ModelConfig, **over) -> ModelConfig:
+    """A tiny same-family config for CPU smoke tests."""
+    kw: dict = dict(
+        n_layers=min(cfg.n_layers, 2 * (len(cfg.block_pattern) if cfg.block_pattern else 1)),
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads < cfg.n_heads else 4,
+        d_ff=256 if cfg.d_ff else 0,
+        vocab=512,
+        head_dim=32 if cfg.head_dim else 0,
+        rnn_width=160 if cfg.rnn_width else 0,
+        window=min(cfg.window, 64) if cfg.window else None,
+    )
+    if cfg.moe is not None:
+        kw["moe"] = dataclasses.replace(
+            cfg.moe, n_routed=8, top_k=2, d_ff_expert=64,
+            d_ff_shared=128 if cfg.moe.n_shared else 0,
+            first_dense_layers=min(cfg.moe.first_dense_layers, 1),
+            d_ff_dense=256 if cfg.moe.first_dense_layers else 0,
+            dispatch="dense")
+    if cfg.mla is not None:
+        kw["mla"] = MLAConfig(q_lora_rank=64, kv_lora_rank=32,
+                              qk_nope_dim=16, qk_rope_dim=16, v_head_dim=32)
+        kw["head_dim"] = 0
+    if cfg.enc_dec:
+        kw["n_enc_layers"] = 2
+    if cfg.vlm_patches:
+        kw["vlm_patches"] = 8
+    kw["policy"] = ShardingPolicy(fsdp=False, seq_parallel=False, remat="none")
+    kw.update(over)
+    return dataclasses.replace(cfg, **kw)
+
+
+_LOADED = False
+
+
+def _ensure_loaded() -> None:
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    from repro.configs import (  # noqa: F401
+        qwen2_5_32b, mistral_large_123b, starcoder2_3b, llama3_8b,
+        recurrentgemma_9b, internvl2_1b, deepseek_v3_671b, qwen2_moe_a2_7b,
+        xlstm_125m, seamless_m4t_large_v2, cnn_zoo,
+    )
+
+
+ASSIGNED_ARCHS = [
+    "qwen2.5-32b", "mistral-large-123b", "starcoder2-3b", "llama3-8b",
+    "recurrentgemma-9b", "internvl2-1b", "deepseek-v3-671b",
+    "qwen2-moe-a2.7b", "xlstm-125m", "seamless-m4t-large-v2",
+]

@@ -1,0 +1,6 @@
+"""The paper's CNN workloads: SqueezeNet, MobileNetV2 (0.5x), ShuffleNetV2 (0.5x)."""
+from repro.configs.base import CNNConfig, register_cnn
+
+SQUEEZENET = register_cnn(CNNConfig(name="squeezenet", width_mult=1.0))
+MOBILENETV2 = register_cnn(CNNConfig(name="mobilenetv2", width_mult=0.5))
+SHUFFLENETV2 = register_cnn(CNNConfig(name="shufflenetv2", width_mult=0.5))

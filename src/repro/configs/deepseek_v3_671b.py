@@ -1,0 +1,44 @@
+"""DeepSeek-V3-671B [moe] — MLA + 1 shared + 256 routed top-8. [arXiv:2412.19437]
+
+Deviations from the released model, recorded per DESIGN.md:
+ - plain top-8 routing (no node-limited group routing), sigmoid gate kept;
+ - MTP head omitted (single-token LM head);
+ - first 3 layers dense FFN (d_ff 18432) as in the paper.
+Expert parallelism spans the flattened (data, model) product = 256 groups
+(1 expert per device on the single-pod mesh), replicated over pods.
+"""
+from repro.configs.base import MLAConfig, MoEConfig, ModelConfig, ShardingPolicy, register
+
+CONFIG = register(ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,        # MLA: per-head latent-expanded KV
+    d_ff=18432,            # dense-layer FFN width
+    vocab=129280,
+    rope_theta=10000.0,
+    norm_eps=1e-6,
+    mla=MLAConfig(
+        q_lora_rank=1536,
+        kv_lora_rank=512,
+        qk_nope_dim=128,
+        qk_rope_dim=64,
+        v_head_dim=128,
+    ),
+    moe=MoEConfig(
+        n_routed=256,
+        top_k=8,
+        d_ff_expert=2048,
+        n_shared=1,
+        d_ff_shared=2048,
+        first_dense_layers=3,
+        d_ff_dense=18432,
+        capacity_factor=1.25,
+        ep_axes=("data", "model"),
+        dispatch="ep",
+    ),
+    policy=ShardingPolicy(fsdp=True, seq_parallel=True, remat="block"),
+    optimizer="adafactor",
+))

@@ -1,0 +1,25 @@
+"""InternVL2-1B [vlm] — InternViT frontend (STUB) + Qwen2-0.5B backbone.
+
+[arXiv:2404.16821] Per the assignment spec the modality frontend is a stub:
+``input_specs()`` provides precomputed patch embeddings (B, 256, d_model)
+which the backbone consumes prepended to the token embeddings.
+"""
+from repro.configs.base import ModelConfig, ShardingPolicy, register
+
+CONFIG = register(ModelConfig(
+    name="internvl2-1b",
+    family="vlm",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    n_kv_heads=2,
+    d_ff=4864,
+    vocab=151655,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    norm_eps=1e-6,
+    tie_embeddings=True,
+    vlm_patches=256,
+    policy=ShardingPolicy(fsdp=False, seq_parallel=True, remat="block"),
+    optimizer="adamw",
+))

@@ -1,0 +1,17 @@
+"""Llama-3-8B [dense] — GQA kv=8, 128k vocab. [arXiv:2407.21783]"""
+from repro.configs.base import ModelConfig, ShardingPolicy, register
+
+CONFIG = register(ModelConfig(
+    name="llama3-8b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=128256,
+    rope_theta=500_000.0,
+    norm_eps=1e-5,
+    policy=ShardingPolicy(fsdp=True, seq_parallel=True, remat="block"),
+    optimizer="adamw",
+))

@@ -1,0 +1,20 @@
+"""Mistral-Large-123B [dense] — GQA kv=8. [hf:mistralai/Mistral-Large-Instruct-2407]"""
+from repro.configs.base import ModelConfig, ShardingPolicy, register
+
+CONFIG = register(ModelConfig(
+    name="mistral-large-123b",
+    family="dense",
+    n_layers=88,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab=32768,
+    head_dim=128,
+    rope_theta=1_000_000.0,
+    norm_eps=1e-5,
+    policy=ShardingPolicy(fsdp=True, seq_parallel=True, remat="block"),
+    # Adafactor (factored second moment, no first moment) — AdamW state for
+    # 123B does not fit 256 x 16 GiB alongside activations.
+    optimizer="adafactor",
+))

@@ -1,0 +1,18 @@
+"""Qwen2.5-32B [dense] — GQA, QKV bias. [hf:Qwen/Qwen2.5-*]"""
+from repro.configs.base import ModelConfig, ShardingPolicy, register
+
+CONFIG = register(ModelConfig(
+    name="qwen2.5-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=27648,
+    vocab=152064,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    norm_eps=1e-6,
+    policy=ShardingPolicy(fsdp=True, seq_parallel=True, remat="block"),
+    optimizer="adamw",
+))

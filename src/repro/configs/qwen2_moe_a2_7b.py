@@ -1,0 +1,32 @@
+"""Qwen2-MoE-A2.7B [moe] — 4 shared + 60 routed top-4. [hf:Qwen/Qwen1.5-MoE-A2.7B]
+
+60 routed experts are padded to 64 for expert parallelism over the model
+axis (16 groups x 4 experts); the 4 pad experts are never routed to.
+"""
+from repro.configs.base import MoEConfig, ModelConfig, ShardingPolicy, register
+
+CONFIG = register(ModelConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=0,
+    vocab=151936,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    norm_eps=1e-6,
+    moe=MoEConfig(
+        n_routed=60,
+        top_k=4,
+        d_ff_expert=1408,
+        n_shared=4,
+        d_ff_shared=1408,
+        capacity_factor=2.0,
+        ep_axes=("model",),
+        dispatch="ep",
+    ),
+    policy=ShardingPolicy(fsdp=True, seq_parallel=True, remat="block"),
+    optimizer="adamw",
+))

@@ -1,0 +1,27 @@
+"""RecurrentGemma-9B [hybrid] — RG-LRU + local attention, pattern (R,R,A).
+
+[arXiv:2402.19427] Griffin architecture: 2 recurrent blocks per 1 local
+(sliding-window 2048) MQA attention block.  Sub-quadratic: long_500k runs.
+"""
+from repro.configs.base import ModelConfig, ShardingPolicy, register
+
+CONFIG = register(ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,          # MQA
+    d_ff=12288,
+    vocab=256000,
+    head_dim=256,
+    block_pattern=("R", "R", "A"),
+    rnn_width=4096,
+    window=2048,
+    attn_impl="local",
+    rope_theta=10000.0,
+    norm_eps=1e-6,
+    tie_embeddings=True,
+    policy=ShardingPolicy(fsdp=True, seq_parallel=True, remat="block"),
+    optimizer="adamw",
+))

@@ -1,0 +1,26 @@
+"""SeamlessM4T-Large-v2 [audio] — enc-dec backbone. [arXiv:2308.11596]
+
+The speech/text modality frontend is a STUB per the assignment:
+``input_specs()`` provides precomputed frame embeddings (B, enc_len, d).
+enc_len = seq_len // 4 (conformer downsampling stand-in).  n_layers is the
+decoder depth; the encoder has 24 layers as well.
+"""
+from repro.configs.base import ModelConfig, ShardingPolicy, register
+
+CONFIG = register(ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="audio",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab=256206,
+    enc_dec=True,
+    n_enc_layers=24,
+    enc_ratio=4,
+    rope_theta=10000.0,
+    norm_eps=1e-5,
+    policy=ShardingPolicy(fsdp=False, seq_parallel=True, remat="block"),
+    optimizer="adamw",
+))

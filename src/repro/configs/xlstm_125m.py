@@ -1,0 +1,25 @@
+"""xLSTM-125M [ssm] — sLSTM + mLSTM blocks, ratio ~7:1. [arXiv:2405.04517]
+
+12 blocks: mLSTM everywhere, sLSTM at every 8th position (index 7) — the
+xLSTM[7:1] ratio of the paper's 125M config.  Attention-free: long_500k runs.
+"""
+from repro.configs.base import ModelConfig, ShardingPolicy, register
+
+CONFIG = register(ModelConfig(
+    name="xlstm-125m",
+    family="ssm",
+    n_layers=12,
+    d_model=768,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,                # xLSTM blocks embed their own up/down projections
+    vocab=50304,
+    block_pattern=("m", "m", "m", "m", "m", "m", "m", "s"),
+    norm_eps=1e-6,
+    tie_embeddings=True,
+    # 125M params: pure data parallelism over all 256/512 chips (heads=4
+    # cannot use a 16-way tensor axis) — "model" folds into the batch axes.
+    policy=ShardingPolicy(fsdp=False, seq_parallel=False, remat="block",
+                          batch_axes=("pod", "data", "model")),
+    optimizer="adamw",
+))

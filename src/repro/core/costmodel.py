@@ -1,0 +1,274 @@
+"""Analytical device cost models — the paper's measurement substrate.
+
+This container has neither the paper's Jetson TX2 + Cyclone10GX board nor a
+TPU, so energy/latency come from explicit models (the paper's own FPGA
+numbers are also model-based: Intel Quartus Power Estimator).  Constants are
+calibrated so that (a) Fig.1-style conv sweeps show the paper's qualitative
+gap (FPGA DHM ~order-of-magnitude energy win, resource ceiling at 64x5x5 on
+224x224x3) and (b) the partitioner's module gains land inside Table I ranges
+(validated in tests/test_paper_claims.py).
+
+Models:
+  TX2GPU       roofline (fp16 peak x batch-1 utilisation curve, LPDDR4 bw)
+               + per-launch overhead; power = idle + dynamic.
+  DHMFPGA      fully pipelined spatial mapping: one output pixel per clock,
+               all weights in logic, zero DRAM traffic; resource = #MACs;
+               power = static + per-MAC toggle energy (8-bit fixed point).
+  PCIe         2.5 GB/s effective + DMA setup latency (paper's link).
+  TPUv5e       197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI — used by
+               the datacentre-scale mapping of the same partitioner.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ConvSpec:
+    """One operator at module level (the paper's partitioning granularity)."""
+    kind: str              # conv | dwconv | pwconv | fc | pool | add | concat | shuffle
+    h: int                 # input feature map height
+    w: int
+    c_in: int
+    c_out: int
+    k: int = 1
+    stride: int = 1
+    groups: int = 1
+
+    @property
+    def h_out(self) -> int:
+        return max(self.h // self.stride, 1)
+
+    @property
+    def w_out(self) -> int:
+        return max(self.w // self.stride, 1)
+
+    @property
+    def macs_per_pixel(self) -> int:
+        if self.kind == "dwconv":
+            return self.k * self.k * self.c_out
+        if self.kind in ("conv", "pwconv"):
+            return self.k * self.k * (self.c_in // self.groups) * self.c_out
+        if self.kind == "fc":
+            return self.c_in * self.c_out
+        return 0
+
+    @property
+    def macs(self) -> float:
+        if self.kind == "fc":
+            return float(self.c_in * self.c_out)
+        return float(self.h_out * self.w_out * self.macs_per_pixel)
+
+    @property
+    def flops(self) -> float:
+        return 2.0 * self.macs
+
+    @property
+    def n_weights(self) -> int:
+        if self.kind == "dwconv":
+            return self.k * self.k * self.c_out
+        if self.kind in ("conv", "pwconv"):
+            return self.k * self.k * (self.c_in // self.groups) * self.c_out
+        if self.kind == "fc":
+            return self.c_in * self.c_out
+        return 0
+
+    def in_bytes(self, dtype_bytes: int = 1) -> int:
+        return self.h * self.w * self.c_in * dtype_bytes
+
+    def out_bytes(self, dtype_bytes: int = 1) -> int:
+        return self.h_out * self.w_out * self.c_out * dtype_bytes
+
+
+@dataclass(frozen=True)
+class Cost:
+    latency: float         # seconds
+    energy: float          # joules
+
+    def __add__(self, o: "Cost") -> "Cost":
+        return Cost(self.latency + o.latency, self.energy + o.energy)
+
+
+ZERO = Cost(0.0, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Jetson TX2 GPU (Pascal, 256 CUDA cores)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TX2GPU:
+    name: str = "jetson-tx2-gpu"
+    peak_flops: float = 1.33e12        # fp16 FMA peak
+    mem_bw: float = 59.7e9             # LPDDR4
+    launch_overhead: float = 100e-6    # per-op kernel launch + sync (batch 1)
+    idle_power: float = 2.5            # W (GPU rail share while active-idle)
+    busy_power: float = 5.0            # W dynamic at full tilt
+    act_bytes: int = 2                 # fp16 activations
+    util_ceiling: float = 0.70
+    util_knee: float = 3e5
+
+    def utilisation(self, spec: ConvSpec) -> float:
+        """Batch-1 conv efficiency on TX2 (PyTorch/cuDNN), empirical shape:
+        small channel counts starve the SMs; saturates near the ceiling."""
+        par = spec.c_out * spec.h_out * spec.w_out
+        sat = par / (par + self.util_knee)
+        depth = 1.0 if spec.kind != "dwconv" else 0.35   # dw convs are bw-bound
+        return max(0.04, self.util_ceiling * sat * depth)
+
+    def op_cost(self, spec: ConvSpec) -> Cost:
+        if spec.macs == 0:                 # pool/add/concat: bandwidth only
+            traffic = (spec.in_bytes(self.act_bytes)
+                       + spec.out_bytes(self.act_bytes))
+            t = traffic / self.mem_bw + self.launch_overhead * 0.5
+            return Cost(t, t * (self.idle_power + 0.3 * self.busy_power))
+        t_comp = spec.flops / (self.peak_flops * self.utilisation(spec))
+        traffic = (spec.in_bytes(self.act_bytes)
+                   + spec.out_bytes(self.act_bytes)
+                   + spec.n_weights * self.act_bytes)
+        t_mem = traffic / self.mem_bw
+        t = max(t_comp, t_mem) + self.launch_overhead
+        util_frac = t_comp / max(t, 1e-12)
+        return Cost(t, t * (self.idle_power + self.busy_power * util_frac))
+
+
+# ---------------------------------------------------------------------------
+# Cyclone 10 GX with Direct Hardware Mapping
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DHMFPGA:
+    """DHM with input-channel time multiplexing.
+
+    Two regimes, both in the paper:
+      * Fig. 1 standalone sweep: FULL spatial unroll (all k*k*C_in*N MACs as
+        logic) — ceiling 64 filters of 5x5 on a 224x224x3 input
+        (25*3*64 = 4800 MACs = ``mac_budget``).
+      * Partitioned modules (Sec. IV): one input-channel *slice* is unrolled
+        (k*k*N MACs per slice, g_par slices in parallel) and C_in streams
+        through over ceil(C_in/g_par) cycles per pixel — this is what makes
+        "all the 1x1 convolutions on the FPGA for all layers" feasible.
+    MAC count (and thus dynamic energy) is identical in both regimes.
+    """
+    name: str = "cyclone10gx-dhm"
+    f_clk: float = 150e6
+    mac_budget: int = 4800             # spatial 8-bit MACs (DSP+ALM)
+    onchip_bytes: int = 6 * 2**20      # M20K: weights + line buffers
+    static_power: float = 2.60         # W (board-level: core+xcvr+regulators)
+    chip_static: float = 0.50          # W (chip-only — the Fig.1 regime:
+                                       # the paper's FPGA numbers are Quartus
+                                       # Power-Estimator chip estimates)
+    mac_energy: float = 2.6e-12        # J per 8-bit MAC (toggling, routed)
+    pipeline_fill: float = 30e-6       # line-buffer fill etc.
+
+    def slice_macs(self, spec: ConvSpec) -> int:
+        """MACs instantiated for ONE input-channel slice of this layer."""
+        if spec.kind == "dwconv":
+            return spec.k * spec.k          # per channel; channels multiplex
+        if spec.kind in ("conv", "pwconv"):
+            return spec.k * spec.k * spec.c_out
+        if spec.kind == "fc":
+            return spec.c_out
+        return 0
+
+    def serial_channels(self, spec: ConvSpec) -> int:
+        return spec.c_out if spec.kind == "dwconv" else \
+            max(spec.c_in // spec.groups, 1)
+
+    def mac_usage(self, spec: ConvSpec, g_par: int = 1) -> int:
+        """Resident MACs for this layer at channel-parallelism g_par."""
+        return self.slice_macs(spec) * min(g_par, self.serial_channels(spec))
+
+    def buffer_bytes(self, spec: ConvSpec) -> int:
+        # (k-1) input line buffers + all weights resident on-chip
+        return (spec.k - 1) * spec.w * spec.c_in + spec.n_weights
+
+    def fits_full_unroll(self, spec: ConvSpec) -> bool:
+        """Fig. 1 regime: every MAC spatial (ceiling: 64 x 5x5 on 224^2x3)."""
+        return (spec.macs_per_pixel <= self.mac_budget and
+                self.buffer_bytes(spec) <= self.onchip_bytes)
+
+    def op_cost(self, spec: ConvSpec, g_par: int = 1) -> Cost:
+        """Channel-multiplexed DHM: ceil(C_serial/g_par) cycles per pixel."""
+        if self.slice_macs(spec) == 0:
+            return Cost(self.pipeline_fill, self.pipeline_fill
+                        * self.static_power)
+        pixels = spec.h_out * spec.w_out
+        steps = -(-self.serial_channels(spec) // g_par)
+        t = pixels * steps / self.f_clk + self.pipeline_fill
+        e_dyn = spec.macs * self.mac_energy
+        return Cost(t, e_dyn + t * self.static_power)
+
+    def full_unroll_cost(self, spec: ConvSpec) -> Cost:
+        """Fig. 1 regime: one output pixel per clock, chip-level power."""
+        pixels = spec.h_out * spec.w_out
+        t = pixels / self.f_clk + self.pipeline_fill
+        return Cost(t, spec.macs * self.mac_energy + t * self.chip_static)
+
+    def fused_cost(self, specs: list["ConvSpec"], g_par=None) -> Cost:
+        """Fused-layer chain: stages stream concurrently in one pipeline;
+        throughput set by the slowest stage; fill paid once."""
+        if not specs:
+            return ZERO
+        g_par = g_par or [1] * len(specs)
+        worst = 0.0
+        for s, g in zip(specs, g_par):
+            if self.slice_macs(s) == 0:
+                continue
+            steps = -(-self.serial_channels(s) // g)
+            worst = max(worst, s.h_out * s.w_out * steps / self.f_clk)
+        t = worst + self.pipeline_fill
+        e_dyn = sum(s.macs for s in specs) * self.mac_energy
+        return Cost(t, e_dyn + t * self.static_power)
+
+
+# ---------------------------------------------------------------------------
+# PCIe gen2 x4 (the paper's inter-device link)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PCIeLink:
+    name: str = "pcie-gen2-x4"
+    bw: float = 2.5e9                  # effective B/s (paper)
+    setup: float = 40e-6               # DMA descriptor + doorbell
+    byte_energy: float = 200e-12       # J/B incl. SerDes both ends
+
+    def xfer(self, nbytes: float) -> Cost:
+        t = self.setup + nbytes / self.bw
+        return Cost(t, nbytes * self.byte_energy + t * 0.15)  # 0.15 W link idle
+
+
+# ---------------------------------------------------------------------------
+# TPU v5e (datacentre mapping of the same machinery)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TPUv5e:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12         # bf16
+    peak_flops_int8: float = 394e12
+    mem_bw: float = 819e9
+    hbm_bytes: int = 16 * 2**30
+    vmem_bytes: int = 128 * 2**20
+    ici_bw: float = 50e9               # per link
+    ici_links: int = 4
+    busy_power: float = 170.0          # W per chip (typical)
+    hbm_byte_energy: float = 120e-12
+    flop_energy: float = 0.35e-12
+
+    def roofline(self, flops: float, hbm_bytes: float,
+                 coll_bytes: float = 0.0, chips: int = 1) -> dict:
+        t_comp = flops / (chips * self.peak_flops)
+        t_mem = hbm_bytes / (chips * self.mem_bw)
+        t_coll = coll_bytes / (chips * self.ici_bw * self.ici_links)
+        return {"compute_s": t_comp, "memory_s": t_mem,
+                "collective_s": t_coll,
+                "bound": max(("compute_s", t_comp), ("memory_s", t_mem),
+                             ("collective_s", t_coll), key=lambda kv: kv[1])[0]}
+
+
+GPU = TX2GPU()
+FPGA = DHMFPGA()
+PCIE = PCIeLink()
+TPU = TPUv5e()

@@ -1,0 +1,209 @@
+"""Module-level dataflow IR — the granularity at which the paper partitions.
+
+A network is a list of ``ModuleGraph``s (Fire module, MBv2 bottleneck,
+ShuffleNetV2 unit, stem, head).  Each node carries a ``ConvSpec`` so the cost
+models can price it on either substrate, and the same IR is executable in
+JAX (``repro.core.hetero``) so partition plans are *runnable*, not just
+priced.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+from repro.core.costmodel import ConvSpec
+
+
+@dataclass(frozen=True)
+class Node:
+    name: str
+    spec: ConvSpec
+    inputs: tuple[str, ...]            # "in" = module input
+    act: str = "none"                  # none | relu | relu6
+
+
+@dataclass
+class ModuleGraph:
+    name: str
+    kind: str                          # fire | bottleneck | shuffle_unit* | stem | head
+    nodes: list[Node]
+    output: str
+    residual: bool = False             # bottleneck: add input to output
+
+    def node(self, name: str) -> Node:
+        return next(n for n in self.nodes if n.name == name)
+
+    def total_macs(self) -> float:
+        return sum(n.spec.macs for n in self.nodes)
+
+
+def _conv(name, kind, h, w, cin, cout, k=1, s=1, groups=1, inputs=("in",),
+          act="relu"):
+    return Node(name, ConvSpec(kind, h, w, cin, cout, k, s, groups),
+                tuple(inputs), act)
+
+
+def make_divisible(v: float, d: int = 8) -> int:
+    out = max(d, int(v + d / 2) // d * d)
+    if out < 0.9 * v:
+        out += d
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SqueezeNet v1.1 (paper workload #1)
+# ---------------------------------------------------------------------------
+
+def fire(name: str, h: int, c_in: int, squeeze: int, expand: int):
+    """squeeze 1x1 -> [expand 1x1 || expand 3x3] -> concat."""
+    return ModuleGraph(name, "fire", [
+        _conv("squeeze", "pwconv", h, h, c_in, squeeze),
+        _conv("exp1", "pwconv", h, h, squeeze, expand, inputs=("squeeze",)),
+        _conv("exp3", "conv", h, h, squeeze, expand, k=3,
+              inputs=("squeeze",)),
+        Node("cat", ConvSpec("concat", h, h, 2 * expand, 2 * expand),
+             ("exp1", "exp3")),
+    ], "cat")
+
+
+def squeezenet(num_classes: int = 1000) -> list[ModuleGraph]:
+    mods = [ModuleGraph("stem", "stem", [
+        _conv("conv1", "conv", 224, 224, 3, 64, k=3, s=2),
+        Node("pool1", ConvSpec("maxpool", 112, 112, 64, 64, k=3, stride=2),
+             ("conv1",)),
+    ], "pool1")]
+    mods += [fire("fire2", 56, 64, 16, 64), fire("fire3", 56, 128, 16, 64)]
+    mods += [ModuleGraph("pool3", "stem", [
+        Node("pool", ConvSpec("maxpool", 56, 56, 128, 128, k=3, stride=2),
+             ("in",))], "pool")]
+    mods += [fire("fire4", 28, 128, 32, 128), fire("fire5", 28, 256, 32, 128)]
+    mods += [ModuleGraph("pool5", "stem", [
+        Node("pool", ConvSpec("maxpool", 28, 28, 256, 256, k=3, stride=2),
+             ("in",))], "pool")]
+    mods += [fire("fire6", 14, 256, 48, 192), fire("fire7", 14, 384, 48, 192),
+             fire("fire8", 14, 384, 64, 256), fire("fire9", 14, 512, 64, 256)]
+    mods += [ModuleGraph("head", "head", [
+        _conv("conv10", "pwconv", 14, 14, 512, num_classes),
+        Node("gap", ConvSpec("gap", 14, 14, num_classes, num_classes),
+             ("conv10",)),
+    ], "gap")]
+    return mods
+
+
+# ---------------------------------------------------------------------------
+# MobileNetV2 (0.5x) (paper workload #2)
+# ---------------------------------------------------------------------------
+
+def bottleneck(name: str, h: int, c_in: int, c_out: int, stride: int,
+               expand_ratio: int):
+    hidden = c_in * expand_ratio
+    nodes = []
+    src = "in"
+    if expand_ratio != 1:
+        nodes.append(_conv("pw_exp", "pwconv", h, h, c_in, hidden,
+                           act="relu6"))
+        src = "pw_exp"
+    nodes.append(_conv("dw", "dwconv", h, h, hidden, hidden, k=3, s=stride,
+                       groups=hidden, inputs=(src,), act="relu6"))
+    h2 = h // stride
+    nodes.append(_conv("pw_proj", "pwconv", h2, h2, hidden, c_out,
+                       inputs=("dw",), act="none"))
+    return ModuleGraph(name, "bottleneck", nodes, "pw_proj",
+                       residual=(stride == 1 and c_in == c_out))
+
+
+def mobilenetv2(width: float = 0.5, num_classes: int = 1000):
+    cfgs = [  # t, c, n, s
+        (1, 16, 1, 1), (6, 24, 2, 2), (6, 32, 3, 2), (6, 64, 4, 2),
+        (6, 96, 3, 1), (6, 160, 3, 2), (6, 320, 1, 1)]
+    c_stem = make_divisible(32 * width)
+    mods = [ModuleGraph("stem", "stem", [
+        _conv("conv1", "conv", 224, 224, 3, c_stem, k=3, s=2, act="relu6")],
+        "conv1")]
+    h, c_in = 112, c_stem
+    idx = 0
+    for t, c, n, s in cfgs:
+        c_out = make_divisible(c * width)
+        for i in range(n):
+            stride = s if i == 0 else 1
+            mods.append(bottleneck(f"bneck{idx}", h, c_in, c_out, stride, t))
+            h //= stride
+            c_in = c_out
+            idx += 1
+    c_last = make_divisible(1280 * max(1.0, width))
+    mods.append(ModuleGraph("head", "head", [
+        _conv("conv_last", "pwconv", h, h, c_in, c_last, act="relu6"),
+        Node("gap", ConvSpec("gap", h, h, c_last, c_last), ("conv_last",)),
+        _conv("fc", "fc", 1, 1, c_last, num_classes, inputs=("gap",),
+              act="none"),
+    ], "fc"))
+    return mods
+
+
+# ---------------------------------------------------------------------------
+# ShuffleNetV2 (0.5x) (paper workload #3)
+# ---------------------------------------------------------------------------
+
+def shuffle_unit(name: str, h: int, c: int, downsample: bool):
+    """ShuffleNetV2 basic/down unit.  c = output channels (split in half)."""
+    half = c // 2
+    if downsample:
+        # branch1: dw3x3/2 -> pw ; branch2: pw -> dw3x3/2 -> pw ; concat
+        cin = c // 2  # input channels (stage input = half of output width)
+        h2 = h // 2
+        nodes = [
+            _conv("b1_dw", "dwconv", h, h, cin, cin, k=3, s=2, groups=cin,
+                  act="none"),
+            _conv("b1_pw", "pwconv", h2, h2, cin, half, inputs=("b1_dw",)),
+            _conv("b2_pw1", "pwconv", h, h, cin, half),
+            _conv("b2_dw", "dwconv", h, h, half, half, k=3, s=2, groups=half,
+                  inputs=("b2_pw1",), act="none"),
+            _conv("b2_pw2", "pwconv", h2, h2, half, half, inputs=("b2_dw",)),
+            Node("cat", ConvSpec("concat", h2, h2, c, c),
+                 ("b1_pw", "b2_pw2")),
+            Node("shuffle", ConvSpec("shuffle", h2, h2, c, c), ("cat",)),
+        ]
+        return ModuleGraph(name, "shuffle_unit_down", nodes, "shuffle")
+    nodes = [
+        Node("split", ConvSpec("split", h, h, c, half), ("in",)),
+        _conv("b2_pw1", "pwconv", h, h, half, half, inputs=("split",)),
+        _conv("b2_dw", "dwconv", h, h, half, half, k=3, groups=half,
+              inputs=("b2_pw1",), act="none"),
+        _conv("b2_pw2", "pwconv", h, h, half, half, inputs=("b2_dw",)),
+        Node("cat", ConvSpec("concat", h, h, c, c), ("split", "b2_pw2")),
+        Node("shuffle", ConvSpec("shuffle", h, h, c, c), ("cat",)),
+    ]
+    return ModuleGraph(name, "shuffle_unit", nodes, "shuffle")
+
+
+def shufflenetv2(width: float = 0.5, num_classes: int = 1000):
+    stage_c = {0.5: (48, 96, 192, 1024), 1.0: (116, 232, 464, 1024)}[width]
+    mods = [ModuleGraph("stem", "stem", [
+        _conv("conv1", "conv", 224, 224, 3, 24, k=3, s=2),
+        Node("pool1", ConvSpec("maxpool", 112, 112, 24, 24, k=3, stride=2),
+             ("conv1",)),
+    ], "pool1")]
+    h, c_in = 56, 24
+    for si, (c, reps) in enumerate(zip(stage_c[:3], (4, 8, 4))):
+        # NB: the down unit's builder takes input channels = c//2; ShuffleNetV2
+        # down-units actually take the previous stage width — we keep the
+        # module-level MAC budget equivalent (paper partitions per unit).
+        mods.append(shuffle_unit(f"stage{si+2}_down", h, c, True))
+        h //= 2
+        for i in range(reps - 1):
+            mods.append(shuffle_unit(f"stage{si+2}_u{i+1}", h, c, False))
+        c_in = c
+    mods.append(ModuleGraph("head", "head", [
+        _conv("conv5", "pwconv", h, h, c_in, stage_c[3]),
+        Node("gap", ConvSpec("gap", h, h, stage_c[3], stage_c[3]),
+             ("conv5",)),
+        _conv("fc", "fc", 1, 1, stage_c[3], num_classes, inputs=("gap",),
+              act="none"),
+    ], "fc"))
+    return mods
+
+
+NETWORKS = {
+    "squeezenet": squeezenet,
+    "mobilenetv2": lambda: mobilenetv2(0.5),
+    "shufflenetv2": lambda: shufflenetv2(0.5),
+}

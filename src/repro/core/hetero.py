@@ -1,0 +1,143 @@
+"""Executable heterogeneous plans: run a ModuleGraph in JAX with substrate
+routing.  "gpu" nodes compute in fp32/bf16; "fpga" nodes go through the
+paper's 8-bit fixed-point path (per-channel weight + per-tensor activation
+quantization, via repro.quant).  GConv splits execute both channel slices
+and sum partials — so every Plan is runnable and testable against the
+monolithic fp32 network, not just priced.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.costmodel import ConvSpec
+from repro.core.graph import ModuleGraph, Node
+from repro.core.schedule import Plan
+from repro.quant import fake_quant
+
+
+def _act(x, kind: str):
+    if kind == "relu":
+        return jax.nn.relu(x)
+    if kind == "relu6":
+        return jnp.clip(x, 0.0, 6.0)
+    return x
+
+
+def _conv_params(key, spec: ConvSpec):
+    cin_g = spec.c_in // spec.groups
+    if spec.kind == "dwconv":
+        shape = (spec.k, spec.k, 1, spec.c_out)
+    elif spec.kind in ("conv", "pwconv"):
+        shape = (spec.k, spec.k, cin_g, spec.c_out)
+    elif spec.kind == "fc":
+        shape = (spec.c_in, spec.c_out)
+    else:
+        return None
+    fan_in = int(np.prod(shape[:-1]))
+    w = jax.random.normal(key, shape, jnp.float32) / np.sqrt(fan_in)
+    return {"w": w, "b": jnp.zeros((spec.c_out,), jnp.float32)}
+
+
+def init_network(mods: list[ModuleGraph], key) -> dict:
+    params: dict = {}
+    for m in mods:
+        keys = jax.random.split(jax.random.fold_in(key, hash(m.name) % 2**31),
+                                len(m.nodes))
+        params[m.name] = {}
+        for n, k in zip(m.nodes, keys):
+            p = _conv_params(k, n.spec)
+            if p is not None:
+                params[m.name][n.name] = p
+    return params
+
+
+def _run_conv(n: Node, p, x, quantized: bool):
+    spec = n.spec
+    w = p["w"]
+    if quantized:                       # the FPGA's 8-bit fixed point
+        x = fake_quant(x)
+        w = fake_quant(w, axis=-1)
+    if spec.kind == "fc":
+        y = x.reshape(x.shape[0], -1) @ w + p["b"]
+        return _act(y, n.act)
+    groups = spec.c_in if spec.kind == "dwconv" else spec.groups
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(spec.stride, spec.stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+    return _act(y + p["b"], n.act)
+
+
+def _run_node(n: Node, params_m, values, assign, gconv):
+    spec = n.spec
+    xs = [values[i] for i in n.inputs]
+    x = xs[0]
+    if spec.kind in ("conv", "dwconv", "pwconv", "fc"):
+        quantized = assign.get(n.name) == "fpga"
+        if n.name in gconv:             # paper Fig.2b: input-channel split
+            frac = gconv[n.name]
+            g = max(1, int(round(spec.c_in * frac)))
+            x_f, x_g = x[..., :g], x[..., g:]
+            w = params_m[n.name]["w"]
+            p_f = {"w": w[..., :g, :], "b": params_m[n.name]["b"]}
+            p_g = {"w": w[..., g:, :], "b": jnp.zeros_like(params_m[n.name]["b"])}
+            nf = Node(n.name, spec, n.inputs, "none")
+            y = (_run_conv(nf, p_f, x_f, True)
+                 + _run_conv(nf, p_g, x_g, False))
+            return _act(y, n.act)
+        return _run_conv(n, params_m[n.name], x, quantized)
+    if spec.kind == "maxpool":
+        return jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, spec.k, spec.k, 1),
+            (1, spec.stride, spec.stride, 1), "SAME")
+    if spec.kind == "avgpool":
+        s = jax.lax.reduce_window(
+            x, 0.0, jax.lax.add, (1, spec.k, spec.k, 1),
+            (1, spec.stride, spec.stride, 1), "SAME")
+        return s / (spec.k * spec.k)
+    if spec.kind == "gap":
+        return x.mean(axis=(1, 2), keepdims=True)
+    if spec.kind == "concat":
+        return jnp.concatenate(xs, axis=-1)
+    if spec.kind == "add":
+        return xs[0] + xs[1]
+    if spec.kind == "split":
+        return x[..., :spec.c_out]      # "split" value = first half; the
+                                        # builder wires the second half via
+                                        # the same node (see concat inputs)
+    if spec.kind == "shuffle":
+        b, h, w_, c = x.shape
+        return (x.reshape(b, h, w_, 2, c // 2).transpose(0, 1, 2, 4, 3)
+                .reshape(b, h, w_, c))
+    raise ValueError(spec.kind)
+
+
+def run_module(m: ModuleGraph, params_m, x, plan: Plan | None = None):
+    assign = plan.assign if plan else {}
+    gconv = plan.gconv if plan else {}
+    values = {"in": x}
+    for n in m.nodes:
+        if m.kind == "shuffle_unit" and n.name == "split":
+            half = n.spec.c_out
+            values["split"] = x[..., half:]
+            values["_identity"] = x[..., :half]
+            continue
+        if m.kind == "shuffle_unit" and n.name == "cat":
+            values["cat"] = jnp.concatenate(
+                [values["_identity"], values[n.inputs[1]]], axis=-1)
+            continue
+        values[n.name] = _run_node(n, params_m, values, assign, gconv)
+    out = values[m.output]
+    if m.residual:
+        out = out + x
+    return out
+
+
+def run_network(mods: list[ModuleGraph], params, x,
+                plans: list[Plan] | None = None):
+    plan_by = {p.module: p for p in plans} if plans else {}
+    for m in mods:
+        x = run_module(m, params[m.name], x, plan_by.get(m.name))
+    return x.reshape(x.shape[0], -1)

@@ -1,0 +1,271 @@
+"""The paper's contribution: module-level FPGA-GPU partition search with a
+single network-wide FPGA resource budget.
+
+DHM is dedicated silicon per mapped layer, so every FPGA placement consumes
+resident MACs + on-chip weight bytes for the lifetime of the network.  The
+partitioner therefore works in two stages:
+
+  1. per module: enumerate the paper's schemes (DWConv split / GConv split /
+     fused-layer / parallel-branch / homogeneous) across channel-parallelism
+     options, pricing each with the device+link models;
+  2. network level: greedy knapsack — upgrade modules from GPU-only in order
+     of energy-saving density (J saved per resident MAC) while the
+     Cyclone10GX budget lasts, under the latency objective:
+
+        minimise energy s.t. module latency <= gpu_only * slack.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+from repro.core import costmodel as cm
+from repro.core.costmodel import ConvSpec, Cost, ZERO
+from repro.core.graph import ModuleGraph, Node
+from repro.core.schedule import (Plan, Resources, fpga_chain_cost,
+                                 fpga_resources, gpu_cost, module_gpu_only,
+                                 parallel_cost, split_spec_in)
+
+ACT_BYTES = 1          # int8 feature maps on the link (paper's 8-bit)
+# channel-parallel slices per mapped layer; high values = full spatial
+# unroll (Fig. 1 regime) for layers cheap enough to afford it
+G_PAR_GRID = (1, 4, 16, 64, 256)
+
+
+def _plan(m: ModuleGraph, scheme: str, cost: Cost, gpu_only: Cost,
+          fpga_nodes: list[Node], g_par: int = 1, assign=None, fused=(),
+          gconv=None, note="") -> Plan:
+    return Plan(m.name, m.kind, scheme, assign or {}, tuple(fused),
+                gconv or {}, g_par, cost, gpu_only,
+                fpga_resources(fpga_nodes, g_par), note)
+
+
+def candidates(m: ModuleGraph) -> list[Plan]:
+    base = module_gpu_only(m)
+    out: list[Plan] = [Plan(m.name, m.kind, "gpu_only",
+                            {n.name: "gpu" for n in m.nodes},
+                            cost=base, gpu_only=base)]
+    conv_nodes = [n for n in m.nodes
+                  if n.spec.kind in ("conv", "dwconv", "pwconv")]
+    if not conv_nodes:
+        return out
+
+    for g_par in G_PAR_GRID:
+        # --- whole module fused on the FPGA (fused-layer, Fig. 2c) --------
+        i_b, o_b = (conv_nodes[0].spec.in_bytes(ACT_BYTES),
+                    conv_nodes[-1].spec.out_bytes(ACT_BYTES))
+        c = fpga_chain_cost(conv_nodes, i_b, o_b, g_par)
+        glue = gpu_cost([n for n in m.nodes if n not in conv_nodes])
+        out.append(_plan(m, "fpga_fused", c + glue, base, conv_nodes, g_par,
+                         {n.name: ("fpga" if n in conv_nodes else "gpu")
+                          for n in m.nodes},
+                         fused=[n.name for n in conv_nodes]))
+        if m.kind == "fire":
+            out += _fire_candidates(m, base, g_par)
+        elif m.kind == "bottleneck":
+            out += _bottleneck_candidates(m, base, g_par)
+        elif m.kind.startswith("shuffle_unit"):
+            out += _shuffle_candidates(m, base, g_par)
+    return out
+
+
+# --- SqueezeNet Fire: squeeze on GPU, expand3x3 ‖ expand1x1 ---------------
+
+def _fire_candidates(m: ModuleGraph, base: Cost, g_par: int) -> list[Plan]:
+    sq, e1, e3 = m.node("squeeze"), m.node("exp1"), m.node("exp3")
+    plans = []
+    # 3x3 slices cost 9x the area of a 1x1 slice: DHM maps k>1 layers at
+    # g_par=1 (the paper's fires are latency-neutral for exactly this reason)
+    if g_par != 1:
+        return plans
+    # paper scheme: Conv3x3 on FPGA hidden under Conv1x1 (+squeeze) on GPU
+    pre = gpu_cost([sq])
+    par = parallel_cost([e1], [e3], e3.spec.in_bytes(ACT_BYTES),
+                        e3.spec.out_bytes(ACT_BYTES), g_par)
+    cost = pre + par + cm.GPU.op_cost(m.node("cat").spec)
+    plans.append(_plan(m, "parallel_branch", cost, base, [e3], g_par,
+                       {"squeeze": "gpu", "exp1": "gpu", "exp3": "fpga",
+                        "cat": "gpu"},
+                       note="exp3 on FPGA ‖ exp1 on GPU (paper Fig.4a)"))
+    # GConv split of exp3 input channels across devices (Fig. 2b)
+    for frac in (0.25, 0.5):
+        f_spec, g_spec = split_spec_in(e3.spec, frac)
+        pre = gpu_cost([sq])
+        par = parallel_cost(
+            [e1, Node("exp3_gpu", g_spec, e3.inputs)],
+            [Node("exp3_fpga", f_spec, e3.inputs)],
+            f_spec.in_bytes(ACT_BYTES), f_spec.out_bytes(ACT_BYTES), g_par)
+        cost = pre + par + cm.GPU.op_cost(m.node("cat").spec)
+        plans.append(_plan(m, "gconv_split", cost, base,
+                           [Node("exp3_fpga", f_spec, e3.inputs)], g_par,
+                           {"squeeze": "gpu", "exp1": "gpu", "cat": "gpu"},
+                           gconv={"exp3": frac},
+                           note=f"exp3 gconv {frac:.2f} in-ch to FPGA"))
+    return plans
+
+
+# --- MobileNetV2 bottleneck: 1x1 convs on FPGA (paper DWConv partition) ---
+
+def _bottleneck_candidates(m: ModuleGraph, base: Cost,
+                           g_par: int) -> list[Plan]:
+    plans = []
+    names = [n.name for n in m.nodes]
+    has_exp = "pw_exp" in names
+    dw, proj = m.node("dw"), m.node("pw_proj")
+    # paper scheme: every 1x1 on FPGA, dw kxk on GPU, sequential
+    pw_nodes = ([m.node("pw_exp")] if has_exp else []) + [proj]
+    cost = ZERO
+    if has_exp:
+        e = m.node("pw_exp")
+        cost = cost + fpga_chain_cost(
+            [e], e.spec.in_bytes(ACT_BYTES), e.spec.out_bytes(ACT_BYTES),
+            g_par)
+    cost = cost + cm.GPU.op_cost(dw.spec)
+    cost = cost + fpga_chain_cost(
+        [proj], proj.spec.in_bytes(ACT_BYTES), proj.spec.out_bytes(ACT_BYTES),
+        g_par)
+    assign = {n.name: ("gpu" if n.name == "dw" else "fpga") for n in m.nodes}
+    plans.append(_plan(m, "dwconv_split", cost, base, pw_nodes, g_par, assign,
+                       note="1x1 on FPGA, kxk dw on GPU (paper Fig.2a)"))
+    # fused tail: dw + proj together on FPGA (fused-layer, Fig.2c)
+    cost = (gpu_cost([m.node("pw_exp")]) if has_exp else ZERO)
+    cost = cost + fpga_chain_cost(
+        [dw, proj], dw.spec.in_bytes(ACT_BYTES),
+        proj.spec.out_bytes(ACT_BYTES), g_par)
+    assign = {n.name: ("fpga" if n.name in ("dw", "pw_proj") else "gpu")
+              for n in m.nodes}
+    plans.append(_plan(m, "fused_layer", cost, base, [dw, proj], g_par,
+                       assign, fused=("dw", "pw_proj"),
+                       note="dw+proj fused on FPGA (paper Fig.2c)"))
+    return plans
+
+
+# --- ShuffleNetV2 units ----------------------------------------------------
+
+def _shuffle_candidates(m: ModuleGraph, base: Cost, g_par: int) -> list[Plan]:
+    plans = []
+    tail = [m.node("cat"), m.node("shuffle")]
+    if m.kind == "shuffle_unit_down":
+        b1 = [m.node("b1_dw"), m.node("b1_pw")]
+        b2 = [m.node("b2_pw1"), m.node("b2_dw"), m.node("b2_pw2")]
+        i_b = b1[0].spec.in_bytes(ACT_BYTES)
+        o_b = b1[-1].spec.out_bytes(ACT_BYTES)
+        cost = parallel_cost(b2, b1, i_b, o_b, g_par) + gpu_cost(tail)
+        assign = {n.name: "fpga" for n in m.nodes}
+        assign.update({n.name: "gpu" for n in b2 + tail})
+        plans.append(_plan(m, "parallel_branch", cost, base, b1, g_par,
+                           assign, fused=("b1_dw", "b1_pw"),
+                           note="branch1 fused on FPGA ‖ branch2 GPU"))
+        return plans
+    b2 = [m.node("b2_pw1"), m.node("b2_dw"), m.node("b2_pw2")]
+    # identity half stays on GPU; working half fused on FPGA
+    i_b = b2[0].spec.in_bytes(ACT_BYTES)
+    o_b = b2[-1].spec.out_bytes(ACT_BYTES)
+    cost = (gpu_cost([m.node("split")])
+            + fpga_chain_cost(b2, i_b, o_b, g_par) + gpu_cost(tail))
+    assign = {n.name: "gpu" for n in m.nodes}
+    assign.update({n.name: "fpga" for n in b2})
+    plans.append(_plan(m, "fused_layer", cost, base, b2, g_par, assign,
+                       fused=tuple(n.name for n in b2),
+                       note="working half fused on FPGA (seq)"))
+    # pw convs to FPGA, dw stays GPU (MBv2-style)
+    pw = [m.node("b2_pw1"), m.node("b2_pw2")]
+    cost = gpu_cost([m.node("split"), m.node("b2_dw")]) + gpu_cost(tail)
+    for n in pw:
+        cost = cost + fpga_chain_cost(
+            [n], n.spec.in_bytes(ACT_BYTES), n.spec.out_bytes(ACT_BYTES),
+            g_par)
+    assign = {x.name: "gpu" for x in m.nodes}
+    assign.update({n.name: "fpga" for n in pw})
+    plans.append(_plan(m, "dwconv_split", cost, base, pw, g_par, assign,
+                       note="1x1s on FPGA, dw on GPU"))
+    return plans
+
+
+# ---------------------------------------------------------------------------
+# Network-level selection under the FPGA resource budget
+# ---------------------------------------------------------------------------
+
+def admissible(p: Plan, latency_slack: float) -> bool:
+    return (p.cost.latency <= p.gpu_only.latency * latency_slack
+            and p.cost.energy < p.gpu_only.energy)
+
+
+# The schemes the paper actually deployed per module family (Sec. IV/V).
+PAPER_SCHEMES = {
+    "fire": ("parallel_branch",),
+    "bottleneck": ("dwconv_split",),
+    "shuffle_unit_down": ("parallel_branch",),
+    "shuffle_unit": ("dwconv_split",),
+    "stem": (),
+    "head": (),
+}
+
+
+def partition_network(modules: list[ModuleGraph], objective: str = "paper",
+                      latency_slack: float = 1.05,
+                      mac_budget: int | None = None,
+                      byte_budget: int | None = None,
+                      paper_faithful: bool = False) -> list[Plan]:
+    mac_budget = cm.FPGA.mac_budget if mac_budget is None else mac_budget
+    byte_budget = cm.FPGA.onchip_bytes if byte_budget is None else byte_budget
+
+    all_cands = {m.name: candidates(m) for m in modules}
+    if paper_faithful:
+        for m in modules:
+            keep = PAPER_SCHEMES.get(m.kind, ())
+            all_cands[m.name] = [
+                p for p in all_cands[m.name]
+                if p.scheme == "gpu_only" or p.scheme in keep]
+    chosen: dict[str, Plan] = {
+        m.name: next(p for p in all_cands[m.name] if p.scheme == "gpu_only")
+        for m in modules}
+
+    if objective == "gpu_only":
+        return [chosen[m.name] for m in modules]
+
+    # hetero options, best-saving-density first
+    options = []
+    for name, cands in all_cands.items():
+        for p in cands:
+            if p.scheme == "gpu_only":
+                continue
+            if objective == "paper" and not admissible(p, latency_slack):
+                continue
+            if objective == "latency" and p.cost.latency >= p.gpu_only.latency:
+                continue
+            density = p.saving / max(p.res.macs + p.res.bytes / 64.0, 1.0)
+            options.append((density, p))
+    options.sort(key=lambda dp: -dp[0])
+
+    macs_left, bytes_left = mac_budget, byte_budget
+    for _d, p in options:
+        cur = chosen[p.module]
+        if cur.scheme != "gpu_only":
+            continue                       # module already upgraded
+        if p.res.macs > macs_left or p.res.bytes > bytes_left:
+            continue
+        chosen[p.module] = p
+        macs_left -= p.res.macs
+        bytes_left -= p.res.bytes
+    return [chosen[m.name] for m in modules]
+
+
+def summarize(plans: list[Plan]) -> dict:
+    tot = ZERO
+    base = ZERO
+    for p in plans:
+        tot = tot + p.cost
+        base = base + p.gpu_only
+    used = Resources()
+    for p in plans:
+        used = used + p.res
+    return {
+        "latency_ms": tot.latency * 1e3,
+        "energy_mJ": tot.energy * 1e3,
+        "gpu_only_latency_ms": base.latency * 1e3,
+        "gpu_only_energy_mJ": base.energy * 1e3,
+        "energy_gain": base.energy / max(tot.energy, 1e-12),
+        "speedup": base.latency / max(tot.latency, 1e-12),
+        "fpga_macs": used.macs,
+        "fpga_bytes": used.bytes,
+    }

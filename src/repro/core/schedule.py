@@ -1,0 +1,99 @@
+"""Schedules and their honest cost evaluation.
+
+The paper's central accounting rule: a heterogeneous module is only a win if
+it wins *including* the PCIe transfers.  Sequential segments sum; parallel
+branches take max(GPU side, FPGA side + comm); energy always sums.
+
+Every FPGA placement also carries a RESOURCE bill (resident MACs + on-chip
+weight/linebuffer bytes) because DHM is dedicated silicon per mapped layer:
+the network-level partitioner allocates a single Cyclone10GX budget across
+all modules (``repro.core.partitioner``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+from repro.core import costmodel as cm
+from repro.core.costmodel import ConvSpec, Cost, ZERO
+from repro.core.graph import ModuleGraph, Node
+
+
+@dataclass(frozen=True)
+class Resources:
+    macs: int = 0
+    bytes: int = 0
+
+    def __add__(self, o: "Resources") -> "Resources":
+        return Resources(self.macs + o.macs, self.bytes + o.bytes)
+
+
+@dataclass
+class Plan:
+    module: str
+    kind: str
+    scheme: str
+    assign: dict = field(default_factory=dict)     # node -> "gpu"|"fpga"
+    fused: tuple = ()                              # fpga nodes fused on-chip
+    gconv: dict = field(default_factory=dict)      # node -> fpga input-ch frac
+    g_par: int = 1                                 # channel parallel slices
+    cost: Cost = ZERO
+    gpu_only: Cost = ZERO
+    res: Resources = Resources()
+    note: str = ""
+
+    @property
+    def energy_gain(self) -> float:
+        return self.gpu_only.energy / max(self.cost.energy, 1e-12)
+
+    @property
+    def speedup(self) -> float:
+        return self.gpu_only.latency / max(self.cost.latency, 1e-12)
+
+    @property
+    def saving(self) -> float:
+        return self.gpu_only.energy - self.cost.energy
+
+
+def fpga_resources(nodes: list[Node], g_par: int = 1) -> Resources:
+    return Resources(
+        sum(cm.FPGA.mac_usage(n.spec, g_par) for n in nodes),
+        sum(cm.FPGA.buffer_bytes(n.spec) for n in nodes))
+
+
+def gpu_cost(nodes: list[Node]) -> Cost:
+    c = ZERO
+    for n in nodes:
+        c = c + cm.GPU.op_cost(n.spec)
+    return c
+
+
+def fpga_chain_cost(nodes: list[Node], in_bytes: int, out_bytes: int,
+                    g_par: int = 1) -> Cost:
+    """A chain executed on the FPGA with DHM fusion; PCIe in and out."""
+    comp = cm.FPGA.fused_cost([n.spec for n in nodes], [g_par] * len(nodes))
+    xin = cm.PCIE.xfer(in_bytes)
+    xout = cm.PCIE.xfer(out_bytes)
+    return Cost(xin.latency + comp.latency + xout.latency,
+                xin.energy + comp.energy + xout.energy)
+
+
+def parallel_cost(gpu_nodes: list[Node], fpga_nodes: list[Node],
+                  fpga_in_bytes: int, fpga_out_bytes: int,
+                  g_par: int = 1) -> Cost:
+    """GPU branch ‖ (send + FPGA branch + recv): the paper's max() schedule."""
+    g = gpu_cost(gpu_nodes)
+    f = fpga_chain_cost(fpga_nodes, fpga_in_bytes, fpga_out_bytes, g_par)
+    return Cost(max(g.latency, f.latency), g.energy + f.energy)
+
+
+def split_spec_in(spec: ConvSpec, frac: float) -> tuple[ConvSpec, ConvSpec]:
+    """Paper Fig.2b GConv: FPGA takes g input channels, GPU takes C_I - g;
+    partial outputs are summed (executor) / concat (grouped semantics)."""
+    g = max(1, int(round(spec.c_in * frac)))
+    g = min(g, spec.c_in - 1)
+    return (replace(spec, c_in=g, groups=1),
+            replace(spec, c_in=spec.c_in - g, groups=1))
+
+
+def module_gpu_only(m: ModuleGraph) -> Cost:
+    return gpu_cost(m.nodes)

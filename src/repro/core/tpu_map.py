@@ -1,0 +1,94 @@
+"""The paper's partitioner applied to the TPU's two substrates.
+
+On the embedded board the choice per module is FPGA-DHM vs GPU; on a TPU
+chip the same decision structure chooses between:
+
+  generic  — each op jit'd separately: every intermediate feature map
+             makes an HBM round trip;
+  fused    — the VMEM-resident Pallas kernel (repro/kernels/fused_block):
+             weights + intermediates stay on-chip, exactly DHM's memory
+             insight, subject to a VMEM resource budget instead of LEs.
+
+Costs come from the TPUv5e roofline model; the same admissibility /
+argmin-selection code shape as `repro.core.partitioner`.  Executed by
+`benchmarks.run tpu_map` and tested in tests/test_tpu_map.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core import costmodel as cm
+from repro.core.costmodel import ConvSpec, TPUv5e
+from repro.core.graph import ModuleGraph
+
+ACT_BYTES = 2      # bf16 feature maps
+
+
+@dataclass(frozen=True)
+class TpuPlan:
+    module: str
+    substrate: str          # "generic" | "fused"
+    t_generic: float
+    t_fused: float
+    vmem_bytes: int
+
+    @property
+    def speedup(self) -> float:
+        return self.t_generic / max(min(self.t_fused, self.t_generic), 1e-12)
+
+
+def _op_time(tpu: TPUv5e, spec: ConvSpec, batch: int,
+             read_in: bool, write_out: bool) -> float:
+    flops = spec.flops * batch
+    bytes_ = spec.n_weights * ACT_BYTES
+    if read_in:
+        bytes_ += spec.in_bytes(ACT_BYTES) * batch
+    if write_out:
+        bytes_ += spec.out_bytes(ACT_BYTES) * batch
+    return max(flops / tpu.peak_flops, bytes_ / tpu.mem_bw)
+
+
+def vmem_usage(m: ModuleGraph) -> int:
+    """Weights + (k-1)-line buffers that must be VMEM-resident when fused."""
+    convs = [n.spec for n in m.nodes
+             if n.spec.kind in ("conv", "dwconv", "pwconv")]
+    return sum((s.n_weights + (s.k - 1) * s.w * s.c_in) * ACT_BYTES
+               for s in convs)
+
+
+def plan_module(m: ModuleGraph, batch: int = 8,
+                tpu: TPUv5e | None = None) -> TpuPlan:
+    tpu = tpu or cm.TPU
+    convs = [n for n in m.nodes
+             if n.spec.kind in ("conv", "dwconv", "pwconv")]
+    if not convs:
+        return TpuPlan(m.name, "generic", 1e-9, 1e-9, 0)
+    # generic: every op pays the intermediate HBM round trip
+    t_gen = sum(_op_time(tpu, n.spec, batch, True, True) for n in convs)
+    # fused: only module input read + output write cross HBM
+    flops = sum(n.spec.flops for n in convs) * batch
+    io = (convs[0].spec.in_bytes(ACT_BYTES)
+          + convs[-1].spec.out_bytes(ACT_BYTES)) * batch
+    w = sum(n.spec.n_weights for n in convs) * ACT_BYTES
+    t_fus = max(flops / tpu.peak_flops, (io + w) / tpu.mem_bw)
+    vm = vmem_usage(m)
+    feasible = vm <= tpu.vmem_bytes // 2        # leave half for activations
+    sub = "fused" if (feasible and t_fus < t_gen) else "generic"
+    return TpuPlan(m.name, sub, t_gen, t_fus if feasible else t_gen, vm)
+
+
+def plan_network(mods: list[ModuleGraph], batch: int = 8) -> list[TpuPlan]:
+    return [plan_module(m, batch) for m in mods]
+
+
+def summarize(plans: list[TpuPlan]) -> dict:
+    t_gen = sum(p.t_generic for p in plans)
+    t_opt = sum(p.t_fused if p.substrate == "fused" else p.t_generic
+                for p in plans)
+    return {
+        "generic_us": t_gen * 1e6,
+        "planned_us": t_opt * 1e6,
+        "speedup": t_gen / max(t_opt, 1e-12),
+        "fused_modules": sum(p.substrate == "fused" for p in plans),
+        "n_modules": len(plans),
+    }

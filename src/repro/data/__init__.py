@@ -1,0 +1,1 @@
+from repro.data.pipeline import TokenPipeline, synthetic_batches  # noqa: F401

@@ -1,0 +1,86 @@
+"""Pallas TPU flash attention (block-wise online softmax).
+
+Grid (B, H, nq): each program owns one q tile in VMEM and streams kv tiles
+with a fori_loop, carrying (acc, m, l).  Causal pruning is STRUCTURAL: the
+loop bound is the q tile's last row, so later kv tiles are never touched —
+unlike masked-dense XLA attention this does ~S^2/2 work, and the tiles are
+128-aligned for the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, out_ref, *, kv_tile: int, causal: bool,
+            scale: float):
+    q = q_ref[0, 0]                           # (TQ, D)
+    TQ, D = q.shape
+    S = k_ref.shape[2]
+    i = pl.program_id(2)
+    q_start = i * TQ
+
+    n_kv = S // kv_tile
+    if causal:
+        # only kv tiles that intersect [0, q_start + TQ)
+        n_live = jnp.minimum((q_start + TQ + kv_tile - 1) // kv_tile, n_kv)
+    else:
+        n_live = n_kv
+
+    def body(j, carry):
+        acc, m, l = carry
+        k = jax.lax.dynamic_slice(k_ref[0, 0], (j * kv_tile, 0),
+                                  (kv_tile, D))
+        v = jax.lax.dynamic_slice(v_ref[0, 0], (j * kv_tile, 0),
+                                  (kv_tile, D))
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (TQ, kv_tile), 0)
+            kpos = j * kv_tile + jax.lax.broadcasted_iota(
+                jnp.int32, (TQ, kv_tile), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        pv = jax.lax.dot_general(p.astype(v.dtype), v,
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        return acc * corr[:, None] + pv, m_new, l
+
+    acc = jnp.zeros((TQ, D), jnp.float32)
+    m = jnp.full((TQ,), NEG_INF, jnp.float32)
+    l = jnp.zeros((TQ,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, n_live, body, (acc, m, l))
+    out_ref[0, 0] = (acc / jnp.maximum(l[:, None], 1e-30)).astype(
+        out_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, q_tile=256, kv_tile=256, causal=True,
+                           interpret=False):
+    """q,k,v (B,H,S,D) -> (B,H,S,D)."""
+    B, H, S, D = q.shape
+    q_tile = min(q_tile, S)
+    kv_tile = min(kv_tile, S)
+    assert S % q_tile == 0 and S % kv_tile == 0
+    scale = 1.0 / (D ** 0.5)
+    kern = functools.partial(_kernel, kv_tile=kv_tile, causal=causal,
+                             scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid=(B, H, S // q_tile),
+        in_specs=[
+            pl.BlockSpec((1, 1, q_tile, D), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, S, D), lambda b, h, i: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, S, D), lambda b, h, i: (b, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_tile, D), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

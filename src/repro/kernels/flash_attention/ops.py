@@ -1,0 +1,17 @@
+"""jit'd wrapper for the Pallas flash-attention kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention as attention_ref
+
+
+@partial(jax.jit, static_argnames=("causal", "use_pallas"))
+def flash_attention(q, k, v, causal: bool = True, use_pallas: bool = True):
+    if not use_pallas:
+        return attention_ref(q, k, v, causal=causal)
+    return flash_attention_pallas(q, k, v, causal=causal,
+                                  interpret=jax.default_backend() == "cpu")

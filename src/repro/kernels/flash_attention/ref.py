@@ -1,0 +1,17 @@
+"""Oracle: plain softmax causal attention."""
+import jax.numpy as jnp
+import jax
+
+
+def attention(q, k, v, causal=True):
+    """q,k,v (B,H,S,D) -> (B,H,S,D)."""
+    S = q.shape[2]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(jnp.float32(q.shape[-1]))
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(q.dtype), v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)

@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: fused dw3x3 + ReLU6 + pw1x1 — the DHM analogue.
+
+DHM's insight re-expressed for the TPU memory hierarchy: the depthwise
+intermediate NEVER touches HBM — it is produced and consumed inside VMEM,
+exactly like DHM keeps inter-layer feature maps inside the FPGA fabric.
+Grid is (batch,); each program streams one feature map through both stages.
+The pointwise stage hits the MXU with an (H*W, C) x (C, Co) matmul whose
+dims are padded to 128 multiples by the wrapper (ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(xp_ref, dww_ref, dwb_ref, pww_ref, pwb_ref, out_ref):
+    # xp: (1, H+2, W+2, C) pre-padded input block in VMEM
+    xp = xp_ref[0]
+    H = out_ref.shape[1]
+    W = out_ref.shape[2]
+    dww = dww_ref[...]
+    acc = jnp.zeros((H, W, xp.shape[-1]), jnp.float32)
+    for dy in range(3):
+        for dx in range(3):
+            acc += xp[dy:dy + H, dx:dx + W, :].astype(jnp.float32) \
+                * dww[dy, dx][None, None, :]
+    h = jnp.clip(acc + dwb_ref[...][None, None, :], 0.0, 6.0)
+    # pointwise: (H*W, C) @ (C, Co) on the MXU, fp32 accumulation
+    hw = h.reshape(H * W, -1).astype(xp.dtype)
+    out = jnp.dot(hw, pww_ref[...], preferred_element_type=jnp.float32)
+    out = out + pwb_ref[...][None, :]
+    out_ref[0] = out.reshape(H, W, -1).astype(out_ref.dtype)
+
+
+def fused_dw_pw_pallas(x, dw_w, dw_b, pw_w, pw_b, *, interpret=False):
+    """x (B,H,W,C) -> (B,H,W,Co); intermediates stay in VMEM."""
+    B, H, W, C = x.shape
+    Co = pw_w.shape[-1]
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    return pl.pallas_call(
+        _kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, H + 2, W + 2, C), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((3, 3, C), lambda b: (0, 0, 0)),
+            pl.BlockSpec((C,), lambda b: (0,)),
+            pl.BlockSpec((C, Co), lambda b: (0, 0)),
+            pl.BlockSpec((Co,), lambda b: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, H, W, Co), lambda b: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, W, Co), x.dtype),
+        interpret=interpret,
+    )(xp, dw_w, dw_b, pw_w, pw_b)

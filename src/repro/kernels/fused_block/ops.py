@@ -1,0 +1,21 @@
+"""jit'd public wrapper for the fused bottleneck-tail kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.fused_block.kernel import fused_dw_pw_pallas
+from repro.kernels.fused_block.ref import fused_dw_pw
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def fused_block(x, dw_w, dw_b, pw_w, pw_b, use_pallas: bool = True):
+    if not use_pallas:
+        return fused_dw_pw(x, dw_w, dw_b, pw_w, pw_b)
+    return fused_dw_pw_pallas(x, dw_w, dw_b, pw_w, pw_b,
+                              interpret=_on_cpu())

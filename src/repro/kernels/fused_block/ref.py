@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused dw3x3 + pw1x1 bottleneck tail."""
+import jax
+import jax.numpy as jnp
+
+
+def fused_dw_pw(x, dw_w, dw_b, pw_w, pw_b):
+    """x (B,H,W,C); dw_w (3,3,C); pw_w (C,Co).  relu6 between stages."""
+    y = jax.lax.conv_general_dilated(
+        x, dw_w[..., None, :], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=x.shape[-1])
+    y = jnp.clip(y + dw_b, 0.0, 6.0)
+    out = jnp.einsum("bhwc,co->bhwo", y, pw_w,
+                     preferred_element_type=jnp.float32)
+    return (out + pw_b).astype(x.dtype)

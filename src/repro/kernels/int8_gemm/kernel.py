@@ -1,0 +1,45 @@
+"""Pallas TPU kernel: 8-bit fixed-point GEMM (the paper's number format).
+
+MXU-native int8: tiles are (TM x K) x (K x TN) with int32 accumulation and
+a fused f32 requantize on the way out.  Tile sizes are multiples of 128 so
+the systolic array is fully fed; K stays resident per tile pair (weights
+"close to the compute", DHM-style).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, xs_ref, ws_ref, out_ref):
+    acc = jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    out_ref[...] = (acc.astype(jnp.float32)
+                    * xs_ref[0] * ws_ref[...][None, :])
+
+
+def int8_gemm_pallas(x_q, w_q, x_scale, w_scale, *, tm=256, tn=256,
+                     interpret=False):
+    M, K = x_q.shape
+    N = w_q.shape[1]
+    tm = min(tm, M)
+    tn = min(tn, N)
+    assert M % tm == 0 and N % tn == 0, (M, N, tm, tn)
+    ws = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32).reshape(-1),
+                          (N,))
+    xs = jnp.asarray(x_scale, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        _kernel,
+        grid=(M // tm, N // tn),
+        in_specs=[
+            pl.BlockSpec((tm, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((K, tn), lambda i, j: (0, j)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((tn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(x_q, w_q, xs, ws)

@@ -1,0 +1,21 @@
+"""jit'd wrapper: quantize + int8 GEMM (serving path building block)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.int8_gemm.kernel import int8_gemm_pallas
+from repro.kernels.int8_gemm.ref import int8_gemm as int8_gemm_ref
+from repro.quant import quantize
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def int8_matmul(x, w, use_pallas: bool = True):
+    """f32/bf16 x (M,K) @ w (K,N) through the int8 fixed-point path."""
+    x_q, x_s = quantize(x)
+    w_q, w_s = quantize(w, axis=-1)
+    if not use_pallas:
+        return int8_gemm_ref(x_q, w_q, x_s, w_s.reshape(1, -1))
+    return int8_gemm_pallas(x_q, w_q, x_s, w_s.reshape(-1),
+                            interpret=jax.default_backend() == "cpu")

@@ -1,0 +1,10 @@
+"""Oracle: int8 x int8 -> int32 -> f32 requantized GEMM."""
+import jax
+import jax.numpy as jnp
+
+
+def int8_gemm(x_q, w_q, x_scale, w_scale):
+    """x_q (M,K) int8; w_q (K,N) int8; scales f32 (scalar / (1,N))."""
+    acc = jax.lax.dot_general(x_q, w_q, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * x_scale * jnp.asarray(w_scale).reshape(1, -1)

@@ -1,0 +1,180 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell: jax.jit(step).lower(ShapeDtypeStructs).compile() must succeed
+on the production mesh; we record memory_analysis(), cost_analysis(), and the
+trip-count-aware HLO analysis (FLOPs / bytes / collective bytes per device)
+into a JSON file consumed by benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod] [--out dir]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, cell_applicable, get_config
+from repro.launch.hlo_analysis import analyze
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import lower_cell
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: Path = RESULTS, hierarchy_levels: int = 0,
+             tag: str = "", overrides: dict | None = None) -> dict:
+    import dataclasses
+    cfg = get_config(arch)
+    if overrides:
+        pol = {k[7:]: v for k, v in overrides.items()
+               if k.startswith("policy.")}
+        moe = {k[4:]: v for k, v in overrides.items() if k.startswith("moe.")}
+        top = {k: v for k, v in overrides.items() if "." not in k}
+        if pol:
+            cfg = dataclasses.replace(
+                cfg, policy=dataclasses.replace(cfg.policy, **pol))
+        if moe and cfg.moe is not None:
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, **moe))
+        if top:
+            cfg = dataclasses.replace(cfg, **top)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    ok, reason = cell_applicable(cfg, shape)
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "tag": tag, "hierarchy_levels": hierarchy_levels}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        _write(out_dir, cell_id, rec)
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        kw = {}
+        if shape.kind in ("train", "prefill") and hierarchy_levels:
+            kw["hierarchy_levels"] = hierarchy_levels
+        lowered = lower_cell(cfg, shape, mesh, **kw)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = analyze(compiled.as_text())
+        n_dev = mesh.devices.size
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            n_devices=n_dev,
+            memory={
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "peak_bytes_per_device": (ma.argument_size_in_bytes
+                                          + ma.temp_size_in_bytes),
+            },
+            xla_cost={"flops_per_call": ca.get("flops", 0.0),
+                      "bytes_accessed": ca.get("bytes accessed", 0.0)},
+            hlo=hlo,
+            model_flops=_model_flops(cfg, shape),
+        )
+    except Exception as e:  # noqa: BLE001 — any failure is a bug to record
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    _write(out_dir, cell_id, rec)
+    return rec
+
+
+def _model_flops(cfg, shape) -> float:
+    """6*N*D (train) / 2*N*D (inference) with N = active params."""
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch       # decode: one token per seq
+
+
+def _write(out_dir: Path, cell_id: str, rec: dict):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    with open(out_dir / f"{cell_id}.json", "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ASSIGNED_ARCHS + ["all"], default="all")
+    ap.add_argument("--shape", choices=list(SHAPES) + ["all"], default="all")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", type=Path, default=RESULTS)
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--hierarchy-levels", type=int, default=0)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (policy.x / moe.x / x)")
+    ap.add_argument("--microbatches", type=int, default=None)
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        if v.lower() in ("true", "false"):
+            overrides[k] = v.lower() == "true"
+        elif v.lstrip("-").isdigit():
+            overrides[k] = int(v)
+        else:
+            try:
+                overrides[k] = float(v)
+            except ValueError:
+                overrides[k] = v
+    if args.microbatches is not None:
+        from repro.launch import specs
+        for a in ASSIGNED_ARCHS:
+            mb, acc = specs.TRAIN_MICROBATCHES.get(a, (1, "float32"))
+            specs.TRAIN_MICROBATCHES[a] = (args.microbatches, acc)
+
+    archs = ASSIGNED_ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multipod]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                cell = f"{arch}__{shape}__{mesh_name}" + (
+                    f"__{args.tag}" if args.tag else "")
+                if args.skip_done and (args.out / f"{cell}.json").exists():
+                    prev = json.loads((args.out / f"{cell}.json").read_text())
+                    if prev.get("status") in ("ok", "skipped"):
+                        print(f"[skip] {cell}: {prev['status']}")
+                        continue
+                print(f"[run ] {cell} ...", flush=True)
+                rec = run_cell(arch, shape, mp, args.out,
+                               args.hierarchy_levels, args.tag, overrides)
+                msg = rec["status"]
+                if rec["status"] == "ok":
+                    peak = rec["memory"]["peak_bytes_per_device"] / 2**30
+                    msg += (f" peak={peak:.2f}GiB/dev "
+                            f"flops/dev={rec['hlo']['flops_per_device']:.3e} "
+                            f"coll={sum(rec['hlo']['collective_bytes'].values()):.3e}B "
+                            f"compile={rec['compile_s']}s")
+                elif rec["status"] == "error":
+                    msg += f" {rec['error'][:200]}"
+                print(f"[done] {cell}: {msg}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

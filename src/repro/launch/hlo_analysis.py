@@ -1,0 +1,300 @@
+"""Static analysis of optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE (no trip-count
+multiplication), which under-reports scanned-layer models by n_layers x.
+This analyzer walks the HLO text, multiplies through while trip counts
+(extracted from the loop condition's comparison constant), and reports:
+
+  - flops               dot/convolution FLOPs, per device
+  - bytes               operand+output bytes of every top-level instruction
+                        (fusion = one node: the standard HLO traffic model)
+  - collective_bytes    per collective opcode, operand-side bytes
+  - collective_counts   op counts (trip-multiplied)
+
+All numbers are PER DEVICE (the module is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def shape_bytes(s: str) -> int:
+    """Total bytes of a shape string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(s):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_dims(s: str) -> list[int]:
+    m = _SHAPE_RE.search(s)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Instr:
+    var: str
+    shape: str
+    opcode: str
+    operands: list[str]
+    attrs: str
+    raw_ops: str = ""
+
+
+@dataclass
+class Computation:
+    name: str
+    params: dict = field(default_factory=dict)   # var -> shape str
+    instrs: list = field(default_factory=list)
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->.*\{")
+_INSTR = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^)]*\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?))\s+"
+    r"([\w\-]+)\((.*?)\)(.*)$")
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+_CALLED = re.compile(r"(?:condition|body|to_apply|calls)=%?([\w\.\-]+)")
+_CONST = re.compile(r"=\s*s32\[\]\s+constant\((\d+)\)")
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = Computation(m.group(1))
+                for p in m.group(2).split(","):
+                    p = p.strip()
+                    if ":" in p:
+                        v, s = p.split(":", 1)
+                        cur.params[v.strip().lstrip("%")] = s.strip()
+                continue
+        else:
+            if line.startswith("}"):
+                comps[cur.name] = cur
+                cur = None
+                continue
+            m = _INSTR.match(line)
+            if m:
+                var, shape, opcode, ops, attrs = m.groups()
+                cur.instrs.append(Instr(var, shape, opcode,
+                                        _OPERAND.findall(ops), attrs, ops))
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: dict = field(default_factory=lambda: defaultdict(float))
+    coll_counts: dict = field(default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] += v * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] += v * mult
+
+    @property
+    def total_coll_bytes(self):
+        return sum(self.coll_bytes.values())
+
+
+_SKIP_BYTES = {"tuple", "get-tuple-element", "parameter", "constant",
+               "bitcast", "after-all", "copy-start", "copy-done",
+               "partition-id", "replica-id", "iota"}
+
+# HBM-traffic model: count operand+output bytes ONLY at fusion boundaries
+# and for data-movement/compute ops a TPU cannot fuse away.  The CPU backend
+# fuses far less than TPU, so counting every top-level elementwise op would
+# overstate traffic by orders of magnitude.
+_BYTES_OPS = {"dot", "convolution", "fusion", "custom-call",
+              "dynamic-update-slice", "dynamic-slice", "gather", "scatter",
+              "sort", "all-gather", "all-reduce", "reduce-scatter",
+              "all-to-all", "collective-permute", "all-gather-start",
+              "all-reduce-start", "collective-permute-start"}
+
+
+class HloAnalyzer:
+    def __init__(self, text: str):
+        self.comps = parse_hlo(text)
+        self._memo: dict[str, Cost] = {}
+        # var shapes per computation for dot flop computation
+        self._shapes: dict[str, dict[str, str]] = {}
+        for name, c in self.comps.items():
+            sh = dict(c.params)
+            for i in c.instrs:
+                sh[i.var] = i.shape
+            self._shapes[name] = sh
+
+    def _dot_flops(self, comp: Computation, i: Instr) -> float:
+        out = 1
+        for d in shape_dims(i.shape):
+            out *= d
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", i.attrs)
+        if not m or not i.operands:
+            return 2.0 * out
+        lhs_shape = self._shapes[comp.name].get(i.operands[0], "")
+        dims = shape_dims(lhs_shape)
+        k = 1
+        for idx in m.group(1).split(","):
+            if idx and int(idx) < len(dims):
+                k *= dims[int(idx)]
+        return 2.0 * out * k
+
+    def _conv_flops(self, comp: Computation, i: Instr) -> float:
+        out = 1
+        for d in shape_dims(i.shape):
+            out *= d
+        if len(i.operands) < 2:
+            return 2.0 * out
+        ker = shape_dims(self._shapes[comp.name].get(i.operands[1], ""))
+        k = 1
+        for d in ker[:-1]:      # all but output-feature dim (approx)
+            k *= d
+        return 2.0 * out * k
+
+    def cost_of(self, comp_name: str) -> Cost:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        self._memo[comp_name] = Cost()      # break cycles defensively
+        comp = self.comps.get(comp_name)
+        c = Cost()
+        if comp is None:
+            return c
+        shapes = self._shapes[comp_name]
+        for i in comp.instrs:
+            if i.opcode == "while":
+                called = dict(
+                    (k, v) for k, v in re.findall(
+                        r"(condition|body)=%?([\w\.\-]+)", i.attrs))
+                trips = self._while_trips(called.get("condition", ""))
+                if "body" in called:
+                    c.add(self.cost_of(called["body"]), trips)
+                if "condition" in called:
+                    c.add(self.cost_of(called["condition"]), trips)
+                continue
+            if i.opcode in ("call", "fusion", "conditional", "async-start"):
+                # bytes at the boundary; recurse for flops/collectives
+                if i.opcode in _BYTES_OPS:
+                    c.bytes += self._io_bytes(i, shapes)
+                for sub in _CALLED.findall(i.attrs):
+                    subc = self.cost_of(sub)
+                    c.flops += subc.flops
+                    for k, v in subc.coll_bytes.items():
+                        c.coll_bytes[k] += v
+                    for k, v in subc.coll_counts.items():
+                        c.coll_counts[k] += v
+                continue
+            if i.opcode == "dot":
+                c.flops += self._dot_flops(comp, i)
+            elif i.opcode == "convolution":
+                c.flops += self._conv_flops(comp, i)
+            for coll in COLLECTIVES:
+                if i.opcode == coll or i.opcode == f"{coll}-start":
+                    b = sum(shape_bytes(shapes.get(o, ""))
+                            for o in i.operands)
+                    if coll == "all-gather":
+                        b = shape_bytes(i.shape)     # output side
+                    c.coll_bytes[coll] += b
+                    c.coll_counts[coll] += 1
+                    break
+            if i.opcode in _BYTES_OPS:
+                c.bytes += self._io_bytes(i, shapes)
+        self._memo[comp_name] = c
+        return c
+
+    def _io_bytes(self, i: Instr, shapes: dict) -> float:
+        """HBM traffic of one instruction.
+
+        Slicing ops move only the slice (the big operand is resident: a
+        dynamic-slice of loop-carried stacked weights reads slice bytes per
+        iteration, not the whole stack).  Fusion/dot operands are capped at
+        8x the output so reductions still count their input but phantom
+        whole-stack operands of slicing fusions do not.
+        """
+        out = shape_bytes(i.shape)
+        if i.opcode in ("dynamic-slice", "gather"):
+            return 2.0 * out
+        if i.opcode == "dynamic-update-slice":
+            upd = (shape_bytes(shapes.get(i.operands[1], ""))
+                   if len(i.operands) > 1 else out)
+            return 2.0 * upd
+        if i.opcode == "scatter":
+            upd = (shape_bytes(shapes.get(i.operands[2], ""))
+                   if len(i.operands) > 2 else out)
+            return 2.0 * upd
+        cap = 8.0 * max(out, 1)
+        return out + sum(min(shape_bytes(shapes.get(o, "")), cap)
+                         for o in i.operands)
+
+    def _while_trips(self, cond_name: str) -> int:
+        """Max s32 scalar constant in the loop condition (+ callees).
+
+        Our loops are jax.lax.scan lowerings: cond is `i < N` with N a
+        literal s32 constant — take the largest one found.
+        """
+        best = 1
+        seen, stack = set(), [cond_name]
+        while stack:
+            n = stack.pop()
+            if n in seen or n not in self.comps:
+                continue
+            seen.add(n)
+            for i in self.comps[n].instrs:
+                if i.opcode == "constant" and i.shape.startswith("s32[]"):
+                    m = re.match(r"\s*(\d+)\s*$", i.raw_ops)
+                    if m:
+                        best = max(best, int(m.group(1)))
+                stack.extend(_CALLED.findall(i.attrs))
+        return best
+
+    def entry_cost(self) -> Cost:
+        entry = None
+        for name, c in self.comps.items():
+            if "main" in name or name.startswith("entry"):
+                entry = name
+        if entry is None:
+            entry = list(self.comps)[-1]
+        return self.cost_of(entry)
+
+
+def analyze(text: str) -> dict:
+    a = HloAnalyzer(text)
+    c = a.entry_cost()
+    return {
+        "flops_per_device": c.flops,
+        "bytes_per_device": c.bytes,
+        "collective_bytes": dict(c.coll_bytes),
+        "collective_counts": dict(c.coll_counts),
+    }

@@ -1,0 +1,204 @@
+"""Per-cell (arch x shape x mesh) lowering specs: the step function, its
+ShapeDtypeStruct arguments, and explicit in/out shardings.
+
+Nothing here allocates device memory: params/opt-state/cache shapes come
+from ``jax.eval_shape``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models.lm import model as lm
+from repro.models.lm.sharding import AxisRules, specs_from_axes, use_rules
+from repro.optim import make_optimizer
+from repro.train.steps import (TrainState, make_decode_fn, make_prefill_fn,
+                               make_train_step)
+
+# Microbatch counts for train_4k chosen so saved activations fit HBM
+# (per-layer remat checkpoints scale with tokens/microbatch).
+TRAIN_MICROBATCHES = {
+    # (microbatches, accum_dtype).  671B: microbatches=1 — a fp32 (or even
+    # bf16) gradient accumulator alone is 2.7 (1.35) TB; without one,
+    # params+grads bf16 = 2.7 TB of the pod's 4 TB and the cell closes.
+    "mistral-large-123b": (8, "bfloat16"),
+    "deepseek-v3-671b": (1, "bfloat16"),
+    "qwen2.5-32b": (4, "float32"),
+    "llama3-8b": (2, "float32"),
+    "recurrentgemma-9b": (2, "float32"),
+    "qwen2-moe-a2.7b": (2, "float32"),
+    "seamless-m4t-large-v2": (2, "float32"),
+    "xlstm-125m": (4, "float32"),
+    "starcoder2-3b": (2, "float32"),
+    "internvl2-1b": (2, "float32"),
+}
+
+
+def _is_axes(x):
+    return isinstance(x, tuple) and all(
+        isinstance(a, (str, type(None))) for a in x)
+
+
+def shardings_of(axes_tree, rules: AxisRules, mesh):
+    return jax.tree.map(
+        lambda axes: NamedSharding(mesh, rules.spec(*axes)),
+        axes_tree, is_leaf=_is_axes)
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeSpec):
+    """ShapeDtypeStructs + logical axes for one input batch."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    axes = {"tokens": ("batch", None)}
+    if cfg.vlm_patches:
+        batch["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.vlm_patches, cfg.d_model), dt)
+        axes["image_embeds"] = ("batch", None, None)
+    if cfg.enc_dec:
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (B, max(S // cfg.enc_ratio, 8), cfg.d_model), dt)
+        axes["frames"] = ("batch", None, None)
+    return batch, axes
+
+
+def make_rules(cfg: ModelConfig, mesh, shape: ShapeSpec | None = None):
+    import dataclasses
+    policy = cfg.policy
+    rules = AxisRules(mesh, policy, cfg.moe)
+    if shape is not None:
+        # longest prefix of the policy batch axes that divides global_batch
+        axes = tuple(a for a in policy.batch_axes if a in mesh.axis_names)
+        while axes:
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            if shape.global_batch % n == 0:
+                break
+            axes = axes[:-1]
+        if "model" in policy.batch_axes and "model" not in axes:
+            # batch can't cover the model axis for this shape: give it back
+            # to tensor-style sharding instead of idling 15/16 of the pod
+            policy = dataclasses.replace(
+                policy, batch_axes=tuple(a for a in policy.batch_axes
+                                         if a != "model"))
+            rules = AxisRules(mesh, policy, cfg.moe)
+        rules.table["batch"] = axes or None      # e.g. long_500k batch=1
+        if shape.kind in ("decode",):
+            rules.table["seq_sp"] = None
+    return rules
+
+
+def params_struct(cfg: ModelConfig):
+    return jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def build_train_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                     hierarchy_levels: int = 0):
+    """Returns (fn, args, in_shard, out_shard, rules)."""
+    rules = make_rules(cfg, mesh, shape)
+    opt = make_optimizer(cfg.optimizer)
+    mb, accum = TRAIN_MICROBATCHES.get(cfg.name, (1, "float32"))
+    step_fn = make_train_step(cfg, opt, microbatches=mb,
+                              hierarchy_levels=hierarchy_levels,
+                              accum_dtype=jnp.dtype(accum))
+
+    p_shapes = params_struct(cfg)
+    opt_shapes = jax.eval_shape(opt.init, p_shapes)
+    state = TrainState(jax.ShapeDtypeStruct((), jnp.int32), p_shapes,
+                       opt_shapes)
+    batch, batch_axes = batch_struct(cfg, shape)
+
+    p_axes = lm.param_axes(cfg)
+    state_axes = TrainState((), p_axes, opt.state_axes(p_axes, p_shapes))
+    state_shard = shardings_of(state_axes, rules, mesh)
+    batch_shard = shardings_of(batch_axes, rules, mesh)
+    metrics_shard = {"loss": NamedSharding(mesh, P()),
+                     "aux": NamedSharding(mesh, P())}
+    return (step_fn, (state, batch), (state_shard, batch_shard),
+            (state_shard, metrics_shard), rules)
+
+
+def build_prefill_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                       hierarchy_levels: int = 0):
+    rules = make_rules(cfg, mesh, shape)
+    fn = make_prefill_fn(cfg, hierarchy_levels)
+    p_shapes = params_struct(cfg)
+    batch, batch_axes = batch_struct(cfg, shape)
+    p_axes = lm.param_axes(cfg)
+    param_shard = shardings_of(p_axes, rules, mesh)
+    batch_shard = shardings_of(batch_axes, rules, mesh)
+    # out: (last logits, caches) — same layout rules as the decode cache
+    c_axes = _prefill_cache_axes(cfg)
+    out_shard = (NamedSharding(mesh, rules.spec("batch", None, "vocab")),
+                 shardings_of(c_axes, rules, mesh))
+    return fn, (p_shapes, batch), (param_shard, batch_shard), out_shard, rules
+
+
+def _prefill_cache_axes(cfg: ModelConfig):
+    """Prefill caches mirror decode cache axes minus ring-buffer pos."""
+    axes = lm.cache_axes(cfg)
+
+    def strip(node):
+        if isinstance(node, dict) and "pos" in node:
+            node = {k: v for k, v in node.items() if k != "pos"}
+        if isinstance(node, dict):
+            return {k: strip(v) for k, v in node.items()}
+        return node
+
+    return strip(axes)
+
+
+def build_decode_cell(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    rules = make_rules(cfg, mesh, shape)
+    fn = make_decode_fn(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    enc_len = max(S // cfg.enc_ratio, 8) if cfg.enc_dec else 0
+    p_shapes = params_struct(cfg)
+    cache_shapes = jax.eval_shape(
+        lambda: lm.init_cache(cfg, B, S, enc_len))
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    clen = jax.ShapeDtypeStruct((), jnp.int32)
+
+    p_axes = lm.param_axes(cfg)
+    c_axes = lm.cache_axes(cfg)
+    param_shard = shardings_of(p_axes, rules, mesh)
+    cache_shard = shardings_of(c_axes, rules, mesh)
+    tok_shard = NamedSharding(mesh, rules.spec("batch", None))
+    clen_shard = NamedSharding(mesh, P())
+    out_shard = (NamedSharding(mesh, rules.spec("batch", None, "vocab")),
+                 cache_shard)
+    return (fn, (p_shapes, cache_shapes, token, clen),
+            (param_shard, cache_shard, tok_shard, clen_shard),
+            out_shard, rules)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, **kw):
+    if shape.kind == "train":
+        return build_train_cell(cfg, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_cell(cfg, shape, mesh, **kw)
+    if shape.kind == "decode":
+        return build_decode_cell(cfg, shape, mesh)
+    raise ValueError(shape.kind)
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, **kw):
+    """Trace + lower one cell under its mesh/rules.  Returns jax Lowered."""
+    fn, args, in_shard, out_shard, rules = build_cell(cfg, shape, mesh, **kw)
+    # donate the mutable aggregate (train state / decode cache) so outputs
+    # alias inputs — on real hardware this halves resident state
+    donate = ()
+    if shape.kind == "train":
+        donate = (0,)
+    elif shape.kind == "decode":
+        donate = (1,)
+    with mesh, use_rules(rules):
+        jf = jax.jit(fn, in_shardings=in_shard, out_shardings=out_shard,
+                     donate_argnums=donate)
+        return jf.lower(*args)

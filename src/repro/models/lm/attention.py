@@ -1,0 +1,306 @@
+"""Attention: GQA (full / chunked-flash / sliding-window) + DeepSeek MLA.
+
+All long-sequence paths are *static-shape* and XLA-native so the dry-run's
+``cost_analysis()`` is meaningful (Pallas kernels are opaque to HLO cost
+analysis; the Pallas flash kernel in ``repro.kernels.flash_attention`` is the
+TPU execution path and is validated against these references).
+
+``hierarchy_levels``: hierarchical causal decomposition.  A masked full
+rectangle costs S^2 score-FLOPs; recursively splitting (q-halves attend
+prefix unmasked + diagonal recursively) converges to the 0.5*S^2 causal
+optimum with *static* shapes: levels L -> (0.5 + 0.5^(L+1)) * S^2.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.sharding import lc
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float, positions):
+    """(..., head_dim//2) cos/sin tables for given integer positions."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D) rotated pairwise over D; positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    cos, sin = rope_freqs(d, theta, positions)            # (S, d/2) or (B,S,d/2)
+    if cos.ndim == 2:                                     # (S, half) -> broadcast
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:                                                 # (B, S, half)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Online-softmax chunked attention (flash-in-XLA)
+# ---------------------------------------------------------------------------
+
+def _chunk_scores(q, k, scale):
+    """q (B,Cq,Kh,G,D), k (B,Ck,Kh,D) -> (B,Kh,G,Cq,Ck) fp32."""
+    return jnp.einsum("bqkgd,bckd->bkgqc", q, k,
+                      preferred_element_type=jnp.float32) * scale
+
+
+def _online_chunk(carry, kv, q, qpos, kpos, scale, causal, window):
+    """One online-softmax step over a kv chunk.  carry=(acc,m,l)."""
+    acc, m, l = carry
+    k, v = kv
+    s = _chunk_scores(q, k, scale)                        # (B,Kh,G,Cq,Ck)
+    mask = (kpos >= 0)[None, :]                           # exclude padding
+    if causal:
+        mask = mask & (qpos[:, None] >= kpos[None, :])
+    if window is not None:
+        mask = mask & ((qpos[:, None] - kpos[None, :]) < window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m_new = jnp.maximum(m, s.max(axis=-1))                # (B,Kh,G,Cq)
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l = l * corr + p.sum(axis=-1)
+    pv = jnp.einsum("bkgqc,bckd->bkgqd", p, v.astype(jnp.float32))
+    acc = acc * corr[..., None] + pv
+    return (acc, m_new, l), None
+
+
+def _attend_partial(q, k, v, q_offset, k_offset, *, scale, causal,
+                    window=None, kv_chunk=1024):
+    """Online-softmax attention returning unnormalised partials.
+
+    q: (B,Cq,Kh,G,D); k,v: (B,Sk,Kh,D).  Returns (acc fp32 (B,Kh,G,Cq,D),
+    m (B,Kh,G,Cq), l (B,Kh,G,Cq)).  Offsets give absolute positions.
+    """
+    B, Cq, Kh, G, D = q.shape
+    Dv = v.shape[-1]
+    Sk = k.shape[1]
+    kv_chunk = math.gcd(Sk, min(kv_chunk, Sk))
+    n_kv = Sk // kv_chunk
+    qpos = q_offset + jnp.arange(Cq)
+    acc = jnp.zeros((B, Kh, G, Cq, Dv), jnp.float32)
+    m = jnp.full((B, Kh, G, Cq), NEG_INF, jnp.float32)
+    l = jnp.zeros((B, Kh, G, Cq), jnp.float32)
+    if n_kv == 1:
+        kpos = k_offset + jnp.arange(Sk)
+        (acc, m, l), _ = _online_chunk((acc, m, l), (k, v), q, qpos, kpos,
+                                       scale, causal, window)
+        return acc, m, l
+
+    kr = k.reshape(B, n_kv, kv_chunk, Kh, D).transpose(1, 0, 2, 3, 4)
+    vr = v.reshape(B, n_kv, kv_chunk, Kh, Dv).transpose(1, 0, 2, 3, 4)
+
+    @jax.checkpoint       # flash-style: recompute p in backward, never save
+    def body(carry, xs):
+        kc, vc, j = xs
+        kpos = k_offset + j * kv_chunk + jnp.arange(kv_chunk)
+        return _online_chunk(carry, (kc, vc), q, qpos, kpos, scale, causal,
+                             window)
+
+    (acc, m, l), _ = jax.lax.scan(
+        body, (acc, m, l), (kr, vr, jnp.arange(n_kv)))
+    return acc, m, l
+
+
+def _merge_partials(parts):
+    """Merge online-softmax partials [(acc, m, l), ...] -> normalised out."""
+    acc0, m0, l0 = parts[0]
+    for acc1, m1, l1 in parts[1:]:
+        m_new = jnp.maximum(m0, m1)
+        c0 = jnp.exp(m0 - m_new)
+        c1 = jnp.exp(m1 - m_new)
+        acc0 = acc0 * c0[..., None] + acc1 * c1[..., None]
+        l0 = l0 * c0 + l1 * c1
+        m0 = m_new
+    return acc0 / jnp.maximum(l0[..., None], 1e-30)
+
+
+def _causal_hier(q, k, v, q_off, k_off, *, scale, levels, q_chunk, kv_chunk):
+    """Hierarchical causal decomposition (static shapes)."""
+    S = q.shape[1]
+    if levels <= 0 or S <= max(q_chunk, kv_chunk) or S % 2:
+        return _causal_scan(q, k, v, q_off, k_off, scale=scale,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk)
+    h = S // 2
+    out1 = _causal_hier(q[:, :h], k[:, :h], v[:, :h], q_off, k_off,
+                        scale=scale, levels=levels - 1, q_chunk=q_chunk,
+                        kv_chunk=kv_chunk)
+    # second q half: unmasked prefix + recursive diagonal, merged online
+    q2 = _to5(q[:, h:])
+    pre = _attend_partial(q2, k[:, :h], v[:, :h], q_off + h, k_off,
+                          scale=scale, causal=False, kv_chunk=kv_chunk)
+    dia = _causal_partial(q[:, h:], k[:, h:], v[:, h:], q_off + h, k_off + h,
+                          scale=scale, q_chunk=q_chunk, kv_chunk=kv_chunk)
+    out2 = _from5(_merge_partials([pre, dia]), q.dtype)
+    return jnp.concatenate([out1, out2], axis=1)
+
+
+def _to5(q):
+    # (B,S,H,D) -> (B,S,Kh,G,D) is done by caller; here q is already 5D or 4D
+    return q
+
+
+def _from5(acc, dtype):
+    # acc (B,Kh,G,Cq,D) -> (B,Cq,Kh*G,D)
+    B, Kh, G, Cq, D = acc.shape
+    return acc.transpose(0, 3, 1, 2, 4).reshape(B, Cq, Kh * G, D).astype(dtype)
+
+
+def _causal_partial(q, k, v, q_off, k_off, *, scale, q_chunk, kv_chunk):
+    """Masked-rectangle causal attention partials for the whole q block."""
+    return _attend_partial(q, k, v, q_off, k_off, scale=scale, causal=True,
+                           kv_chunk=kv_chunk)
+
+
+def _causal_scan(q, k, v, q_off, k_off, *, scale, q_chunk, kv_chunk):
+    """Scan over q chunks; each does online softmax over all kv (masked)."""
+    B, S, Kh, G, D = q.shape
+    q_chunk = math.gcd(S, min(q_chunk, S))
+    nq = S // q_chunk
+    if nq == 1:
+        acc, m, l = _attend_partial(q, k, v, q_off, k_off, scale=scale,
+                                    causal=True, kv_chunk=kv_chunk)
+        return _from5(_merge_partials([(acc, m, l)]), q.dtype)
+
+    qr = q.reshape(B, nq, q_chunk, Kh, G, D).transpose(1, 0, 2, 3, 4, 5)
+
+    @jax.checkpoint
+    def body(_, xs):
+        qc, i = xs
+        acc, m, l = _attend_partial(qc, k, v, q_off + i * q_chunk, k_off,
+                                    scale=scale, causal=True,
+                                    kv_chunk=kv_chunk)
+        return None, _from5(_merge_partials([(acc, m, l)]), q.dtype)
+
+    _, outs = jax.lax.scan(body, None, (qr, jnp.arange(nq)))
+    # outs: (nq, B, q_chunk, H, Dv)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, Kh * G, -1)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def gqa_attention(q, k, v, *, causal=True, window=None, impl="chunked",
+                  q_chunk=512, kv_chunk=1024, hierarchy_levels=0):
+    """q (B,S,H,D); k,v (B,S,Kh,D); H % Kh == 0.  Returns (B,S,H,D)."""
+    B, S, H, D = q.shape
+    Kh = k.shape[2]
+    G = H // Kh
+    scale = 1.0 / math.sqrt(D)
+    q5 = q.reshape(B, S, Kh, G, D)
+    if impl == "local" and window is not None and S > window:
+        return _local_attention(q5, k, v, window=window, scale=scale)
+    if impl == "full" or S <= q_chunk:
+        acc, m, l = _attend_partial(q5, k, v, 0, 0, scale=scale,
+                                    causal=causal, window=window,
+                                    kv_chunk=max(S, 1))
+        return _from5(_merge_partials([(acc, m, l)]), q.dtype)
+    if not causal:
+        acc, m, l = _attend_partial(q5, k, v, 0, 0, scale=scale, causal=False,
+                                    kv_chunk=kv_chunk)
+        return _from5(_merge_partials([(acc, m, l)]), q.dtype)
+    if hierarchy_levels > 0:
+        return _causal_hier(q5, k, v, 0, 0, scale=scale,
+                            levels=hierarchy_levels, q_chunk=q_chunk,
+                            kv_chunk=kv_chunk)
+    return _causal_scan(q5, k, v, 0, 0, scale=scale, q_chunk=q_chunk,
+                        kv_chunk=kv_chunk)
+
+
+def _local_attention(q5, k, v, *, window, scale):
+    """Banded sliding-window attention: q chunk i sees kv [iW-W, iW+W)."""
+    B, S, Kh, G, D = q5.shape
+    W = window
+    nq = S // W
+    assert S % W == 0, (S, W)
+    kp = jnp.pad(k, ((0, 0), (W, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (W, 0), (0, 0), (0, 0)))
+    qr = q5.reshape(B, nq, W, Kh, G, D).transpose(1, 0, 2, 3, 4, 5)
+
+    @jax.checkpoint
+    def body(_, xs):
+        qc, i = xs
+        k_sl = jax.lax.dynamic_slice_in_dim(kp, i * W, 2 * W, axis=1)
+        v_sl = jax.lax.dynamic_slice_in_dim(vp, i * W, 2 * W, axis=1)
+        # absolute positions: q chunk starts at i*W; the slice starts at
+        # real position i*W - W (front pad has kpos < 0 -> masked)
+        acc, m, l = _attend_partial(qc, k_sl, v_sl, i * W, i * W - W,
+                                    scale=scale, causal=True, window=W,
+                                    kv_chunk=2 * W)
+        return None, _from5(_merge_partials([(acc, m, l)]), qc.dtype)
+
+    _, outs = jax.lax.scan(body, None, (qr, jnp.arange(nq)))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, Kh * G, -1)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=None,
+                     chunk=4096):
+    """Single-step decode, flash-decoding style: online softmax over cache
+    chunks so only one chunk is ever live/upcast at a time.
+
+    q (B,1,H,D); caches (B,Smax,Kh,D); cache_len (B,).
+    """
+    B, _, H, D = q.shape
+    Kh = k_cache.shape[2]
+    Dv = v_cache.shape[-1]
+    G = H // Kh
+    Smax = k_cache.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    q5 = q.reshape(B, 1, Kh, G, D)
+    chunk = math.gcd(Smax, min(chunk, Smax))
+    nc = Smax // chunk
+
+    def score_chunk(kj, vj, kpos):
+        s = jnp.einsum("bqkgd,bckd->bkgqc", q5, kj,
+                       preferred_element_type=jnp.float32) * scale
+        valid = kpos[None] < cache_len[:, None]              # (B, chunk)
+        if window is not None:
+            valid &= kpos[None] >= (cache_len[:, None] - window)
+        return jnp.where(valid[:, None, None, None, :], s, NEG_INF), vj
+
+    def online(carry, sv):
+        acc, m, l = carry
+        s, vj = sv
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(q.dtype), vj,
+                        preferred_element_type=jnp.float32)
+        return (acc * corr[..., None] + pv, m_new, l), None
+
+    acc = jnp.zeros((B, Kh, G, 1, Dv), jnp.float32)
+    m = jnp.full((B, Kh, G, 1), NEG_INF, jnp.float32)
+    l = jnp.zeros((B, Kh, G, 1), jnp.float32)
+    if nc == 1:
+        s, vj = score_chunk(k_cache, v_cache, jnp.arange(Smax))
+        (acc, m, l), _ = online((acc, m, l), (s, vj))
+    else:
+        kr = k_cache.reshape(B, nc, chunk, Kh, D).transpose(1, 0, 2, 3, 4)
+        vr = v_cache.reshape(B, nc, chunk, Kh, Dv).transpose(1, 0, 2, 3, 4)
+
+        def body(carry, xs):
+            kj, vj, j = xs
+            s, vj = score_chunk(kj, vj, j * chunk + jnp.arange(chunk))
+            return online(carry, (s, vj))[0], None
+
+        (acc, m, l), _ = jax.lax.scan(body, (acc, m, l),
+                                      (kr, vr, jnp.arange(nc)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, 1, H, Dv).astype(q.dtype)

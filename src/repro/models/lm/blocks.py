@@ -1,0 +1,486 @@
+"""Transformer / hybrid blocks: schemas + apply for every layer kind.
+
+Layer kinds:
+  "A" — (self-)attention + FFN/MoE     (GQA or MLA)
+  "D" — decoder block: self-attn + cross-attn + FFN   (enc-dec)
+  "E" — encoder block: bidirectional attn + FFN
+  "R" — RG-LRU recurrent block + FFN   (recurrentgemma)
+  "m" — mLSTM block (self-contained)
+  "s" — sLSTM block (self-contained)
+
+``apply_block(cfg, kind, params, x, ctx)`` where ctx carries positions,
+mode ("train"|"decode"), per-layer cache slice, encoder output, and returns
+(x, new_cache_slice, aux_loss).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.lm import attention as attn
+from repro.models.lm.common import (Schema, ffn_apply, ffn_schema,
+                                    merge_schemas, norm_schema, prefix_schema,
+                                    rms_norm)
+from repro.models.lm.moe import moe_apply, moe_schema
+from repro.models.lm.rglru import rglru_apply, rglru_init_state, rglru_schema
+from repro.models.lm.sharding import lc
+from repro.models.lm.xlstm import (mlstm_apply, mlstm_init_state,
+                                   mlstm_schema, slstm_apply,
+                                   slstm_init_state, slstm_schema)
+
+
+@dataclass
+class BlockCtx:
+    mode: str                      # "train" | "decode"
+    positions: Any                 # (S,) int32 absolute positions
+    cache: Any = None              # per-layer cache slice (decode) / None
+    enc_out: Any = None            # (B, Se, d) for cross-attention
+    cache_len: Any = None          # scalar int32 current length (decode)
+    hierarchy_levels: int = 0      # causal-attention decomposition level
+
+
+# ---------------------------------------------------------------------------
+# Attention sublayer (GQA)
+# ---------------------------------------------------------------------------
+
+def gqa_schema(cfg: ModelConfig, cross: bool = False) -> Schema:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads * hd, cfg.n_kv_heads * hd
+    s: Schema = {
+        "wq": ((d, nq), ("embed", "heads"), "normal"),
+        "wk": ((d, nkv), ("embed", "kv_heads"), "normal"),
+        "wv": ((d, nkv), ("embed", "kv_heads"), "normal"),
+        "wo": ((nq, d), ("heads", "embed"), "normal"),
+    }
+    if cfg.qkv_bias and not cross:
+        s.update({
+            "bq": ((nq,), ("heads",), "zeros"),
+            "bk": ((nkv,), ("kv_heads",), "zeros"),
+            "bv": ((nkv,), ("kv_heads",), "zeros"),
+        })
+    return s
+
+
+def _qkv(cfg, p, x, kv_src=None):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    kv_src = x if kv_src is None else kv_src
+    Skv = kv_src.shape[1]
+    q = jnp.einsum("bsd,dn->bsn", x, p["wq"])
+    k = jnp.einsum("bsd,dn->bsn", kv_src, p["wk"])
+    v = jnp.einsum("bsd,dn->bsn", kv_src, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = lc(q.reshape(B, S, cfg.n_heads, hd), "batch", None, "heads", None)
+    k = lc(k.reshape(B, Skv, cfg.n_kv_heads, hd), "batch", None, "kv_heads", None)
+    v = lc(v.reshape(B, Skv, cfg.n_kv_heads, hd), "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def gqa_self_attention(cfg: ModelConfig, p, x, ctx: BlockCtx):
+    """Returns (out, new_cache).
+
+    Cache layout: {k,v: (B, Smax, Kh*hd)} — the head dim is FLATTENED so the
+    cache shards evenly over a 16-way model axis even when Kh < 16 (jit
+    argument shardings must divide exactly; intermediates may pad).
+    """
+    B, S, _ = x.shape
+    Kh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    q, k, v = _qkv(cfg, p, x)
+    if ctx.mode == "decode":
+        q = attn.apply_rope(q, ctx.positions, cfg.rope_theta)
+        k = attn.apply_rope(k, ctx.positions, cfg.rope_theta)
+        cache = ctx.cache
+        kf, vf = k.reshape(B, 1, Kh * hd), v.reshape(B, 1, Kh * hd)
+        if cfg.window is not None:                     # ring buffer
+            slot = ctx.cache_len % cfg.window
+            kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], kf, slot, 1)
+            vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], vf, slot, 1)
+            pos = jax.lax.dynamic_update_slice_in_dim(
+                cache["pos"], ctx.cache_len[None].astype(jnp.int32), slot, 0)
+            W = cfg.window
+            k4 = kc.reshape(B, W, Kh, hd)
+            v4 = vc.reshape(B, W, Kh, hd)
+            s = jnp.einsum("bqkgd,bckd->bkgqc",
+                           q.reshape(B, 1, Kh, -1, hd), k4,
+                           preferred_element_type=jnp.float32)
+            s = s / jnp.sqrt(jnp.float32(hd))
+            valid = ((pos >= 0) & (pos <= ctx.cache_len)
+                     & (pos > ctx.cache_len - W))
+            s = jnp.where(valid[None, None, None, None, :], s, attn.NEG_INF)
+            pr = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bkgqc,bckd->bkgqd", pr.astype(x.dtype), v4,
+                           preferred_element_type=jnp.float32)
+            o = o.transpose(0, 3, 1, 2, 4).reshape(B, 1, cfg.n_heads, -1)
+            out, new_cache = o.astype(x.dtype), {"k": kc, "v": vc, "pos": pos}
+        else:
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], kf, ctx.cache_len, 1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], vf, ctx.cache_len, 1)
+            Smax = kc.shape[1]
+            out = attn.decode_attention(q, kc.reshape(B, Smax, Kh, hd),
+                                        vc.reshape(B, Smax, Kh, hd),
+                                        jnp.full((B,), ctx.cache_len + 1))
+            new_cache = {"k": kc, "v": vc}
+    else:
+        q = attn.apply_rope(q, ctx.positions, cfg.rope_theta)
+        k = attn.apply_rope(k, ctx.positions, cfg.rope_theta)
+        new_cache = {"k": k.reshape(B, S, Kh * hd),
+                     "v": v.reshape(B, S, Kh * hd)}    # prefill: raw kv
+        ka, va = k, v
+        if cfg.policy.gqa_expand_kv and Kh < cfg.n_heads:
+            g = cfg.n_heads // Kh
+            ka = lc(jnp.repeat(k, g, axis=2), "batch", None, "heads", None)
+            va = lc(jnp.repeat(v, g, axis=2), "batch", None, "heads", None)
+        impl = ("local" if (cfg.window is not None and cfg.attn_impl == "local")
+                else cfg.attn_impl)
+        out = attn.gqa_attention(q, ka, va, causal=True, window=cfg.window,
+                                 impl=impl,
+                                 hierarchy_levels=ctx.hierarchy_levels)
+    out = jnp.einsum(
+        "bsn,nd->bsd",
+        out.reshape(B, out.shape[1], cfg.n_heads * cfg.resolved_head_dim),
+        p["wo"])
+    return out, new_cache
+
+
+def cross_attention(cfg: ModelConfig, p, x, ctx: BlockCtx):
+    """Cross-attn: q from x, kv from enc_out (precomputed in decode cache).
+
+    Cache layout: xk/xv flattened (B, Se, Kh*hd) like the self-attn cache.
+    """
+    B, S, _ = x.shape
+    Kh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dn->bsn", x, p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    if ctx.mode == "decode" and ctx.cache is not None and "xk" in ctx.cache:
+        Se = ctx.cache["xk"].shape[1]
+        k = ctx.cache["xk"].reshape(B, Se, Kh, hd)
+        v = ctx.cache["xv"].reshape(B, Se, Kh, hd)
+    else:
+        Se = ctx.enc_out.shape[1]
+        k = jnp.einsum("bsd,dn->bsn", ctx.enc_out, p["wk"]).reshape(
+            B, Se, Kh, hd)
+        v = jnp.einsum("bsd,dn->bsn", ctx.enc_out, p["wv"]).reshape(
+            B, Se, Kh, hd)
+    out = attn.gqa_attention(q, k, v, causal=False, impl="chunked")
+    out = jnp.einsum("bsn,nd->bsd",
+                     out.reshape(B, S, cfg.n_heads * hd), p["wo"])
+    return out, {"xk": k.reshape(B, Se, Kh * hd),
+                 "xv": v.reshape(B, Se, Kh * hd)}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_schema(cfg: ModelConfig) -> Schema:
+    m, d, H = cfg.mla, cfg.d_model, cfg.n_heads
+    return {
+        "wdq": ((d, m.q_lora_rank), ("embed", None), "normal"),
+        "q_norm/scale": ((m.q_lora_rank,), (None,), "zeros"),
+        "wuq": ((m.q_lora_rank, H * (m.qk_nope_dim + m.qk_rope_dim)),
+                (None, "heads"), "normal"),
+        "wdkv": ((d, m.kv_lora_rank), ("embed", None), "normal"),
+        "kv_norm/scale": ((m.kv_lora_rank,), (None,), "zeros"),
+        "wkr": ((d, m.qk_rope_dim), ("embed", None), "normal"),
+        "wuk": ((m.kv_lora_rank, H, m.qk_nope_dim), (None, "heads", None), "normal"),
+        "wuv": ((m.kv_lora_rank, H, m.v_head_dim), (None, "heads", None), "normal"),
+        "wo": ((H * m.v_head_dim, d), ("heads", "embed"), "normal"),
+    }
+
+
+def mla_attention(cfg: ModelConfig, p, x, ctx: BlockCtx):
+    """Returns (out, cache {ckv:(B,Smax,r), kr:(B,Smax,rope)})."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wdq"]),
+                  p["q_norm"]["scale"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rn->bsn", cq, p["wuq"]).reshape(
+        B, S, H, m.qk_nope_dim + m.qk_rope_dim)
+    q = lc(q, "batch", None, "heads", None)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    q_rope = attn.apply_rope(q_rope, ctx.positions, cfg.rope_theta)
+    ckv = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wdkv"]),
+                   p["kv_norm"]["scale"], cfg.norm_eps)
+    kr = attn.apply_rope(
+        jnp.einsum("bsd,dr->bsr", x, p["wkr"])[:, :, None, :],
+        ctx.positions, cfg.rope_theta)[:, :, 0, :]
+
+    if ctx.mode == "decode":
+        cache = ctx.cache
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv,
+                                                    ctx.cache_len, 1)
+        kr_c = jax.lax.dynamic_update_slice_in_dim(cache["kr"], kr,
+                                                   ctx.cache_len, 1)
+        # absorbed decode: scores in the 512-d latent space, W_uk folded
+        # into q.  The latent cache has no head dim, so its SEQUENCE dim is
+        # sharded over the model axis (sequence-parallel decode): each shard
+        # scores its cache slice; GSPMD reduces the softmax + context sums.
+        ckv_c = lc(ckv_c, "batch", "seq_kv", None)
+        kr_c = lc(kr_c, "batch", "seq_kv", None)
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, p["wuk"],
+                           preferred_element_type=jnp.float32)
+        s = (jnp.einsum("bshr,bcr->bshc", q_lat.astype(x.dtype), ckv_c,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bshr,bcr->bshc", q_rope, kr_c,
+                          preferred_element_type=jnp.float32))
+        s = s / jnp.sqrt(jnp.float32(m.qk_nope_dim + m.qk_rope_dim))
+        pos = jnp.arange(ckv_c.shape[1])
+        valid = pos[None] < (ctx.cache_len + 1)
+        s = jnp.where(valid[:, None, None, :], s, attn.NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        ctx_lat = jnp.einsum("bshc,bcr->bshr", pr.astype(x.dtype), ckv_c,
+                             preferred_element_type=jnp.float32)
+        o = jnp.einsum("bshr,rhv->bshv", ctx_lat.astype(x.dtype), p["wuv"],
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        out = jnp.einsum("bsn,nd->bsd", o.reshape(B, S, -1), p["wo"])
+        return out, {"ckv": ckv_c, "kr": kr_c}
+
+    # train / prefill: materialise per-head k, v
+    k_nope = jnp.einsum("bcr,rhn->bchn", ckv, p["wuk"])
+    v = jnp.einsum("bcr,rhv->bchv", ckv, p["wuv"])
+    v = lc(v, "batch", None, "heads", None)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr[:, :, None, :],
+                                  (B, S, H, m.qk_rope_dim))], axis=-1)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = attn.gqa_attention(qf, k, v, causal=True, impl=cfg.attn_impl,
+                             hierarchy_levels=ctx.hierarchy_levels)
+    out = jnp.einsum("bsn,nd->bsd",
+                     out.reshape(B, S, H * m.v_head_dim), p["wo"])
+    return out, {"ckv": ckv, "kr": kr}
+
+
+def _mla_decode_chunked(q_lat, q_rope, ckv_c, kr_c, cache_len, scale,
+                        chunk: int = 4096):
+    """Online-softmax over latent-cache chunks.  q_lat (B,H,r); q_rope
+    (B,H,rope); ckv_c (B,Smax,r); kr_c (B,Smax,rope).  Returns (B,H,r) f32."""
+    import math as _math
+    B, H, r = q_lat.shape
+    Smax = ckv_c.shape[1]
+    chunk = _math.gcd(Smax, min(chunk, Smax))
+    nc = Smax // chunk
+
+    def score(cj, kj, kpos):
+        s = (jnp.einsum("bhr,bcr->bhc", q_lat, cj,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bhr,bcr->bhc", q_rope, kj,
+                          preferred_element_type=jnp.float32)) * scale
+        valid = kpos[None] < (cache_len + 1)
+        return jnp.where(valid[:, None, :], s, attn.NEG_INF)
+
+    def online(carry, scj):
+        acc, mx, l = carry
+        s, cj = scj
+        m_new = jnp.maximum(mx, s.max(-1))
+        pr = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(mx - m_new)
+        l = l * corr + pr.sum(-1)
+        pv = jnp.einsum("bhc,bcr->bhr", pr.astype(cj.dtype), cj,
+                        preferred_element_type=jnp.float32)
+        return (acc * corr[..., None] + pv, m_new, l), None
+
+    acc = jnp.zeros((B, H, r), jnp.float32)
+    mx = jnp.full((B, H), attn.NEG_INF, jnp.float32)
+    l = jnp.zeros((B, H), jnp.float32)
+    if nc == 1:
+        s = score(ckv_c, kr_c, jnp.arange(Smax))
+        (acc, mx, l), _ = online((acc, mx, l), (s, ckv_c))
+    else:
+        cr = ckv_c.reshape(B, nc, chunk, r).transpose(1, 0, 2, 3)
+        kr = kr_c.reshape(B, nc, chunk, -1).transpose(1, 0, 2, 3)
+
+        def body(carry, xs):
+            cj, kj, j = xs
+            s = score(cj, kj, j * chunk + jnp.arange(chunk))
+            return online(carry, (s, cj))[0], None
+
+        (acc, mx, l), _ = jax.lax.scan(body, (acc, mx, l),
+                                       (cr, kr, jnp.arange(nc)))
+    return acc / jnp.maximum(l[..., None], 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# Block-level schema/apply
+# ---------------------------------------------------------------------------
+
+def _ffn_part_schema(cfg: ModelConfig, layer_idx: int) -> Schema:
+    d = cfg.d_model
+    if cfg.moe is not None:
+        if layer_idx < cfg.moe.first_dense_layers:
+            return prefix_schema("ffn", ffn_schema(d, cfg.moe.d_ff_dense))
+        n_ep = 1
+        return prefix_schema("moe", moe_schema(d, cfg.moe, _ep_count(cfg)))
+    if cfg.d_ff:
+        return prefix_schema("ffn", ffn_schema(d, cfg.d_ff))
+    return {}
+
+
+def _ep_count(cfg: ModelConfig) -> int:
+    # padding target for routed experts (mesh-independent: the production
+    # mesh has data=16, model=16 -> ep in {16, 256}; pad to lcm-friendly 16ths)
+    n = 1
+    for a in cfg.moe.ep_axes:
+        n *= 16
+    return n
+
+
+def block_schema(cfg: ModelConfig, kind: str, layer_idx: int) -> Schema:
+    d = cfg.d_model
+    if kind in ("A", "E", "D"):
+        mixer = (mla_schema(cfg) if cfg.mla is not None
+                 else gqa_schema(cfg))
+        s = merge_schemas(
+            prefix_schema("norm_attn", norm_schema(d)),
+            prefix_schema("attn", mixer),
+        )
+        if kind == "D":
+            s = merge_schemas(
+                s, prefix_schema("norm_cross", norm_schema(d)),
+                prefix_schema("cross", gqa_schema(cfg, cross=True)))
+        ffn = _ffn_part_schema(cfg, layer_idx)
+        if ffn:
+            s = merge_schemas(s, prefix_schema("norm_ffn", norm_schema(d)),
+                              ffn)
+        return s
+    if kind == "R":
+        s = merge_schemas(
+            prefix_schema("norm_attn", norm_schema(d)),
+            prefix_schema("rglru", rglru_schema(d, cfg.rnn_width or d)),
+        )
+        ffn = _ffn_part_schema(cfg, layer_idx)
+        if ffn:
+            s = merge_schemas(s, prefix_schema("norm_ffn", norm_schema(d)),
+                              ffn)
+        return s
+    if kind == "m":
+        return merge_schemas(prefix_schema("norm_attn", norm_schema(d)),
+                             prefix_schema("mlstm", mlstm_schema(d, cfg.n_heads)))
+    if kind == "s":
+        return merge_schemas(prefix_schema("norm_attn", norm_schema(d)),
+                             prefix_schema("slstm", slstm_schema(d, cfg.n_heads)))
+    raise ValueError(kind)
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, smax: int,
+                     enc_len: int = 0):
+    """Zeroed cache slice for one layer (decode mode)."""
+    hd = cfg.resolved_head_dim
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if kind in ("A", "E", "D"):
+        nkv = cfg.n_kv_heads * hd
+        if cfg.mla is not None:
+            c = {"ckv": jnp.zeros((batch, smax, cfg.mla.kv_lora_rank), dt),
+                 "kr": jnp.zeros((batch, smax, cfg.mla.qk_rope_dim), dt)}
+        elif cfg.window is not None:
+            c = {"k": jnp.zeros((batch, cfg.window, nkv), dt),
+                 "v": jnp.zeros((batch, cfg.window, nkv), dt),
+                 "pos": jnp.full((cfg.window,), -1, jnp.int32)}
+        else:
+            c = {"k": jnp.zeros((batch, smax, nkv), dt),
+                 "v": jnp.zeros((batch, smax, nkv), dt)}
+        if kind == "D":
+            c["xk"] = jnp.zeros((batch, enc_len, nkv), dt)
+            c["xv"] = jnp.zeros((batch, enc_len, nkv), dt)
+        return c
+    if kind == "R":
+        return rglru_init_state(batch, cfg.rnn_width or cfg.d_model)
+    if kind == "m":
+        dm = 2 * cfg.d_model
+        return mlstm_init_state(batch, cfg.n_heads, dm // cfg.n_heads)
+    if kind == "s":
+        return slstm_init_state(batch, cfg.d_model)
+    raise ValueError(kind)
+
+
+def block_cache_axes(cfg: ModelConfig, kind: str):
+    """Logical-axes tree mirroring ``init_block_cache``."""
+    if kind in ("A", "E", "D"):
+        if cfg.mla is not None:
+            c = {"ckv": ("batch", "seq_kv", None),
+                 "kr": ("batch", "seq_kv", None)}
+        elif cfg.window is not None:
+            c = {"k": ("batch", None, "kv_heads"),
+                 "v": ("batch", None, "kv_heads"),
+                 "pos": (None,)}
+        else:
+            c = {"k": ("batch", None, "kv_heads"),
+                 "v": ("batch", None, "kv_heads")}
+        if kind == "D":
+            c["xk"] = ("batch", None, "kv_heads")
+            c["xv"] = ("batch", None, "kv_heads")
+        return c
+    if kind == "R":
+        return {"h": ("batch", "rnn"), "conv": ("batch", None, "rnn")}
+    if kind == "m":
+        # mLSTM has too few heads for a 16-way axis; shard the value dim
+        return (("batch", None, None, "rnn"), ("batch", None, "rnn"),
+                ("batch", None))
+    if kind == "s":
+        return {"c": ("batch", "rnn"), "n": ("batch", "rnn"),
+                "h": ("batch", "rnn"), "m": ("batch", "rnn")}
+    raise ValueError(kind)
+
+
+def apply_block(cfg: ModelConfig, kind: str, layer_idx: int, p, x,
+                ctx: BlockCtx):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["norm_attn"]["scale"], cfg.norm_eps)
+    if kind in ("A", "E", "D"):
+        if cfg.mla is not None:
+            out, cache = mla_attention(cfg, p["attn"], h, ctx)
+        else:
+            if kind == "E":
+                q, k, v = _qkv(cfg, p["attn"], h)
+                q = attn.apply_rope(q, ctx.positions, cfg.rope_theta)
+                k = attn.apply_rope(k, ctx.positions, cfg.rope_theta)
+                o = attn.gqa_attention(q, k, v, causal=False, impl="chunked")
+                out = jnp.einsum("bsn,nd->bsd",
+                                 o.reshape(h.shape[0], h.shape[1], -1),
+                                 p["attn"]["wo"])
+                cache = None
+            else:
+                out, cache = gqa_self_attention(cfg, p["attn"], h, ctx)
+        x = x + lc(out, "batch", "seq_sp", None)
+        new_cache = cache
+        if kind == "D":
+            h2 = rms_norm(x, p["norm_cross"]["scale"], cfg.norm_eps)
+            out2, xc = cross_attention(cfg, p["cross"], h2, ctx)
+            x = x + out2
+            if new_cache is not None and xc is not None:
+                new_cache = {**new_cache, **xc}
+    elif kind == "R":
+        out, new_cache = rglru_apply(
+            p["rglru"], h, None if ctx.mode == "train" and ctx.cache is None
+            else ctx.cache)
+        x = x + lc(out, "batch", "seq_sp", None)
+    elif kind == "m":
+        out, new_cache = mlstm_apply(p["mlstm"], h, cfg.n_heads,
+                                     None if ctx.cache is None else ctx.cache)
+        return x + out, new_cache, aux
+    elif kind == "s":
+        out, new_cache = slstm_apply(p["slstm"], h, cfg.n_heads,
+                                     None if ctx.cache is None else ctx.cache)
+        return x + out, new_cache, aux
+    else:
+        raise ValueError(kind)
+
+    # FFN / MoE sublayer — purely per-token: stays in SP (sequence-sharded)
+    # layout; only attention ever gathers the sequence dim
+    if "norm_ffn" in p:
+        x = lc(x, "batch", "seq_sp", None)
+        h = lc(rms_norm(x, p["norm_ffn"]["scale"], cfg.norm_eps),
+               "batch", "seq_sp", None)
+        if "moe" in p:
+            out, aux = moe_apply(p["moe"], h, cfg.moe)
+        else:
+            out = ffn_apply(p["ffn"], h)
+        x = x + lc(out, "batch", "seq_sp", None)
+    return x, new_cache, aux

@@ -1,0 +1,101 @@
+"""Shared LM primitives: schemas, init, RMSNorm, SwiGLU FFN."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# A "schema" maps param path -> (shape, logical_axes, init_kind).
+# init_kind: "normal" (fan-in scaled), "zeros", "ones".
+Schema = dict
+
+
+def init_from_schema(schema: Schema, key, dtype) -> dict:
+    flat = {}
+    paths = sorted(schema)
+    keys = jax.random.split(key, len(paths))
+    for k, path in zip(keys, paths):
+        shape, _axes, kind = schema[path]
+        if kind == "zeros":
+            arr = jnp.zeros(shape, dtype)
+        elif kind == "ones":
+            arr = jnp.ones(shape, dtype)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = 1.0 / np.sqrt(max(fan_in, 1))
+            arr = (jax.random.normal(k, shape, jnp.float32) * std).astype(dtype)
+        flat[path] = arr
+    return unflatten(flat)
+
+
+def axes_from_schema(schema: Schema) -> dict:
+    return unflatten({p: axes for p, (_s, axes, _k) in schema.items()})
+
+
+def unflatten(flat: dict) -> dict:
+    out: dict = {}
+    for path, v in flat.items():
+        parts = path.split("/")
+        d = out
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = v
+    return out
+
+
+def prefix_schema(prefix: str, schema: Schema) -> Schema:
+    return {f"{prefix}/{p}": v for p, v in schema.items()}
+
+
+def merge_schemas(*schemas: Schema) -> Schema:
+    out: Schema = {}
+    for s in schemas:
+        for k, v in s.items():
+            assert k not in out, f"duplicate param path {k}"
+            out[k] = v
+    return out
+
+
+def stack_axes(axes_tree):
+    """Prepend the 'layers' (scan) axis to every logical-axes tuple."""
+    return jax.tree.map(
+        lambda axes: ("layers",) + tuple(axes),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def norm_schema(d: int) -> Schema:
+    return {"scale": ((d,), (None,), "zeros")}
+
+
+def ffn_schema(d: int, f: int) -> Schema:
+    return {
+        "w_gate": ((d, f), ("embed", "ffn"), "normal"),
+        "w_up": ((d, f), ("embed", "ffn"), "normal"),
+        "w_down": ((f, d), ("ffn", "embed"), "normal"),
+    }
+
+
+def ffn_apply(p, x, hidden_axes=None):
+    from repro.models.lm.sharding import lc
+    h = jnp.einsum("...d,df->...f", x, p["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, p["w_up"])
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * u
+    if hidden_axes is None:
+        hidden_axes = ("batch",) + (None,) * (h.ndim - 2) + ("ffn",)
+    h = lc(h, *hidden_axes)
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])

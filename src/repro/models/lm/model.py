@@ -1,0 +1,394 @@
+"""The composable LM: init / forward / prefill / decode for every arch family.
+
+Layers are grouped into (prefix, scanned stack, suffix):
+ - prefix  — unrolled leading layers (e.g. DeepSeek's 3 dense-FFN layers)
+ - stack   — `lax.scan` over repeating *pattern units* (one HLO body for 58
+             MoE layers / 12x(R,R,A) units / ...), remat per unit
+ - suffix  — unrolled remainder (e.g. recurrentgemma's trailing R,R)
+
+Params and decode caches are pytrees mirroring this grouping; scanned leaves
+carry a leading n_units axis.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.lm.blocks import (BlockCtx, apply_block, block_schema,
+                                    init_block_cache)
+from repro.models.lm.common import (axes_from_schema, init_from_schema,
+                                    rms_norm, stack_axes)
+from repro.models.lm.sharding import lc
+
+
+@dataclass(frozen=True)
+class LayerGroups:
+    prefix: tuple[str, ...]
+    unit: tuple[str, ...]
+    n_units: int
+    suffix: tuple[str, ...]
+
+
+def layer_groups(cfg: ModelConfig, kinds=None) -> LayerGroups:
+    kinds = list(kinds if kinds is not None else cfg.layer_kinds())
+    prefix_n = cfg.moe.first_dense_layers if cfg.moe is not None else 0
+    rest = kinds[prefix_n:]
+    unit = len(cfg.block_pattern) if cfg.block_pattern else 1
+    n_units = len(rest) // unit
+    return LayerGroups(
+        prefix=tuple(kinds[:prefix_n]),
+        unit=tuple(rest[:unit]) if n_units else (),
+        n_units=n_units,
+        suffix=tuple(rest[n_units * unit:]),
+    )
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _unit_schemas(cfg, groups: LayerGroups, ref_idx: int):
+    return {f"b{j}": block_schema(cfg, kind, ref_idx + j)
+            for j, kind in enumerate(groups.unit)}
+
+
+def _init_unit(cfg, groups, ref_idx, key):
+    schemas = _unit_schemas(cfg, groups, ref_idx)
+    keys = jax.random.split(key, len(schemas))
+    return {name: init_from_schema(schemas[name], k, _dtype(cfg))
+            for (name, k) in zip(sorted(schemas), keys)}
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dt = _dtype(cfg)
+    groups = layer_groups(cfg)
+    k_embed, k_head, k_pre, k_stack, k_suf, k_enc = jax.random.split(key, 6)
+    pv = cfg.padded_vocab
+    params: dict = {
+        "embed": (jax.random.normal(k_embed, (pv, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dt),
+        "final_norm": {"scale": jnp.zeros((cfg.d_model,), dt)},
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = (jax.random.normal(
+            k_head, (cfg.d_model, pv), jnp.float32)
+            / np.sqrt(cfg.d_model)).astype(dt)
+    if groups.prefix:
+        keys = jax.random.split(k_pre, len(groups.prefix))
+        params["prefix"] = {
+            str(i): init_from_schema(block_schema(cfg, kind, i), keys[i], dt)
+            for i, kind in enumerate(groups.prefix)}
+    if groups.n_units:
+        keys = jax.random.split(k_stack, groups.n_units)
+        params["stack"] = jax.vmap(
+            lambda k: _init_unit(cfg, groups, len(groups.prefix), k))(keys)
+    if groups.suffix:
+        keys = jax.random.split(k_suf, len(groups.suffix))
+        base = len(groups.prefix) + groups.n_units * len(groups.unit)
+        params["suffix"] = {
+            str(i): init_from_schema(
+                block_schema(cfg, kind, base + i), keys[i], dt)
+            for i, kind in enumerate(groups.suffix)}
+    if cfg.enc_dec:
+        keys = jax.random.split(k_enc, cfg.n_enc_layers + 1)
+        params["encoder"] = {
+            str(i): init_from_schema(block_schema(cfg, "E", i), keys[i], dt)
+            for i in range(cfg.n_enc_layers)}
+        params["enc_norm"] = {"scale": jnp.zeros((cfg.d_model,), dt)}
+    return params
+
+
+def param_axes(cfg: ModelConfig) -> dict:
+    """Logical-axes pytree mirroring ``init_params``."""
+    groups = layer_groups(cfg)
+    axes: dict = {
+        "embed": ("vocab", "embed"),
+        "final_norm": {"scale": (None,)},
+    }
+    if not cfg.tie_embeddings:
+        axes["head"] = ("embed", "vocab")
+    if groups.prefix:
+        axes["prefix"] = {
+            str(i): axes_from_schema(block_schema(cfg, kind, i))
+            for i, kind in enumerate(groups.prefix)}
+    if groups.n_units:
+        unit_axes = {f"b{j}": axes_from_schema(
+            block_schema(cfg, kind, len(groups.prefix) + j))
+            for j, kind in enumerate(groups.unit)}
+        axes["stack"] = stack_axes(unit_axes)
+    if groups.suffix:
+        base = len(groups.prefix) + groups.n_units * len(groups.unit)
+        axes["suffix"] = {
+            str(i): axes_from_schema(block_schema(cfg, kind, base + i))
+            for i, kind in enumerate(groups.suffix)}
+    if cfg.enc_dec:
+        axes["encoder"] = {
+            str(i): axes_from_schema(block_schema(cfg, "E", i))
+            for i in range(cfg.n_enc_layers)}
+        axes["enc_norm"] = {"scale": (None,)}
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _run_layers(cfg, params, x, ctx: BlockCtx, caches=None,
+                collect_cache=False):
+    """Run prefix + stack + suffix.  Returns (x, new_caches, aux)."""
+    groups = layer_groups(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    new_caches: dict = {}
+
+    def get(c, *ks):
+        for k_ in ks:
+            if c is None:
+                return None
+            c = c.get(k_) if isinstance(c, dict) else c
+        return c
+
+    remat_unrolled = cfg.policy.remat == "block" and ctx.mode == "train"
+
+    def run_one(kind, idx, p_, x_, sl):
+        def f(p__, x__):
+            return apply_block(cfg, kind, idx, p__, x__,
+                               _with_cache(ctx, sl))
+        if remat_unrolled:
+            f = jax.checkpoint(f)
+        return f(p_, x_)
+
+    for i, kind in enumerate(groups.prefix):
+        sl = get(caches, "prefix", str(i))
+        x, nc, a = run_one(kind, i, params["prefix"][str(i)], x, sl)
+        aux = aux + a
+        if collect_cache:
+            new_caches.setdefault("prefix", {})[str(i)] = nc
+
+    if groups.n_units:
+        ref = len(groups.prefix)
+        remat = cfg.policy.remat == "block" and ctx.mode == "train"
+
+        def one_block(j, kind, p_, xc, sl):
+            def f(p__, xc__):
+                return apply_block(cfg, kind, ref + j, p__, xc__,
+                                   _with_cache(ctx, sl))
+            if remat:
+                f = jax.checkpoint(f)
+            return f(p_, xc)
+
+        def unit_body(carry, xs):
+            xc, auxc = carry
+            up, uc = xs
+            ncs = {}
+            for j, kind in enumerate(groups.unit):
+                sl = None if uc is None else uc[f"b{j}"]
+                xc, nc, a = one_block(j, kind, up[f"b{j}"], xc, sl)
+                auxc = auxc + a
+                ncs[f"b{j}"] = nc
+            xc = lc(xc, "batch", "seq_sp", None)
+            if not collect_cache:
+                ncs = None
+            return (xc, auxc), ncs
+
+        stack_caches = get(caches, "stack")
+        if stack_caches is None:
+            (x, aux), ncs = jax.lax.scan(
+                lambda c, p_: unit_body(c, (p_, None)), (x, aux),
+                params["stack"])
+        else:
+            (x, aux), ncs = jax.lax.scan(unit_body, (x, aux),
+                                         (params["stack"], stack_caches))
+        if collect_cache:
+            new_caches["stack"] = ncs
+
+    base = len(groups.prefix) + groups.n_units * len(groups.unit)
+    for i, kind in enumerate(groups.suffix):
+        sl = get(caches, "suffix", str(i))
+        x, nc, a = run_one(kind, base + i, params["suffix"][str(i)], x, sl)
+        aux = aux + a
+        if collect_cache:
+            new_caches.setdefault("suffix", {})[str(i)] = nc
+    return x, new_caches, aux
+
+
+def _with_cache(ctx: BlockCtx, cache) -> BlockCtx:
+    return BlockCtx(mode=ctx.mode, positions=ctx.positions, cache=cache,
+                    enc_out=ctx.enc_out, cache_len=ctx.cache_len,
+                    hierarchy_levels=ctx.hierarchy_levels)
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """Encoder over precomputed frame embeddings (B, Se, d)."""
+    x = lc(frames, "batch", "seq_sp", None)
+    pos = jnp.arange(frames.shape[1])
+    ctx = BlockCtx(mode="train", positions=pos)
+    for i in range(cfg.n_enc_layers):
+        x, _, _ = apply_block(cfg, "E", i, params["encoder"][str(i)], x, ctx)
+    return rms_norm(x, params["enc_norm"]["scale"], cfg.norm_eps)
+
+
+def forward(cfg: ModelConfig, params, batch: dict, *, return_cache=False,
+            hierarchy_levels: int = 0):
+    """batch: tokens (B,S) [+ image_embeds (B,P,d) | frames (B,Se,d)].
+
+    Returns (logits (B, S_total, V), caches|None, aux_loss).
+    """
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    if cfg.vlm_patches:
+        img = batch["image_embeds"].astype(x.dtype)
+        x = jnp.concatenate([img, x], axis=1)
+    x = lc(x, "batch", "seq_sp", None)
+    enc_out = None
+    if cfg.enc_dec:
+        enc_out = encode(cfg, params, batch["frames"].astype(x.dtype))
+    S = x.shape[1]
+    ctx = BlockCtx(mode="train", positions=jnp.arange(S), enc_out=enc_out,
+                   hierarchy_levels=hierarchy_levels)
+    x, caches, aux = _run_layers(cfg, params, x, ctx,
+                                 collect_cache=return_cache)
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = _lm_head(cfg, params, x)
+    return logits, (caches if return_cache else None), aux
+
+
+def _lm_head(cfg: ModelConfig, params, x):
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head,
+                        preferred_element_type=jnp.float32)
+    if cfg.padded_vocab != cfg.vocab:      # mask pad rows out of the softmax
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    return lc(logits, "batch", None, "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, smax: int, enc_len: int = 0):
+    groups = layer_groups(cfg)
+    cache: dict = {}
+    if groups.prefix:
+        cache["prefix"] = {
+            str(i): init_block_cache(cfg, kind, batch, smax, enc_len)
+            for i, kind in enumerate(groups.prefix)}
+    if groups.n_units:
+        def one(_):
+            return {f"b{j}": init_block_cache(cfg, kind, batch, smax, enc_len)
+                    for j, kind in enumerate(groups.unit)}
+        cache["stack"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (groups.n_units,) + x.shape),
+            one(None))
+    if groups.suffix:
+        cache["suffix"] = {
+            str(i): init_block_cache(cfg, kind, batch, smax, enc_len)
+            for i, kind in enumerate(groups.suffix)}
+    return cache
+
+
+def cache_axes(cfg: ModelConfig):
+    """Logical-axes tree mirroring ``init_cache``."""
+    from repro.models.lm.blocks import block_cache_axes
+    groups = layer_groups(cfg)
+    axes: dict = {}
+    if groups.prefix:
+        axes["prefix"] = {str(i): block_cache_axes(cfg, kind)
+                          for i, kind in enumerate(groups.prefix)}
+    if groups.n_units:
+        unit = {f"b{j}": block_cache_axes(cfg, kind)
+                for j, kind in enumerate(groups.unit)}
+        axes["stack"] = stack_axes(unit)
+    if groups.suffix:
+        axes["suffix"] = {str(i): block_cache_axes(cfg, kind)
+                          for i, kind in enumerate(groups.suffix)}
+    return axes
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, cache_len):
+    """token (B,1) int32; cache_len scalar int32.  Returns (logits, cache)."""
+    x = jnp.take(params["embed"], token, axis=0)
+    x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    x = lc(x, "batch", None, None)
+    pos = cache_len[None] if cache_len.ndim == 0 else cache_len
+    ctx = BlockCtx(mode="decode", positions=pos, cache_len=cache_len)
+    x, new_caches, _ = _run_layers(cfg, params, x, ctx, caches=cache,
+                                   collect_cache=True)
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return _lm_head(cfg, params, x), new_caches
+
+
+def prefill(cfg: ModelConfig, params, batch: dict):
+    """Forward over the prompt, returning (last_logits, caches).
+
+    Cache seq dims equal the prompt length; the serve driver re-pads into
+    its decode cache (``decode_cache_from_prefill``).
+    """
+    logits, caches, _ = forward(cfg, params, batch, return_cache=True)
+    return logits[:, -1:], caches
+
+
+def decode_cache_from_prefill(cfg: ModelConfig, caches, prompt_len: int,
+                              smax: int):
+    """Pad prefill caches (seq dim = prompt_len) into decode caches (smax).
+
+    Attention k/v grow to smax; sliding-window caches become ring buffers;
+    recurrent states pass through unchanged.
+    """
+    W = cfg.window
+
+    def fix(c, lead):
+        """c: one layer's cache dict; lead=1 if leaves carry n_units dim."""
+        if not isinstance(c, dict) or not any(
+                n in c for n in ("k", "v", "ckv", "kr")):
+            return c                                  # recurrent state
+        out = dict(c)
+        sdim = 1 + lead                               # (units?, B, S, ...)
+        for name in ("k", "v", "ckv", "kr"):
+            if name not in c:
+                continue
+            arr = c[name]
+            if W is not None and name in ("k", "v"):
+                if prompt_len >= W:
+                    idx = [slice(None)] * arr.ndim
+                    idx[sdim] = slice(prompt_len - W, prompt_len)
+                    tail = arr[tuple(idx)]
+                    slots = np.arange(prompt_len - W, prompt_len) % W
+                    out[name] = jnp.take(tail, np.argsort(slots), axis=sdim)
+                else:
+                    pad = [(0, 0)] * arr.ndim
+                    pad[sdim] = (0, W - prompt_len)
+                    out[name] = jnp.pad(arr, pad)
+            else:
+                pad = [(0, 0)] * arr.ndim
+                pad[sdim] = (0, smax - prompt_len)
+                out[name] = jnp.pad(arr, pad)
+        if W is not None and "k" in c:
+            pos = np.full((W,), -1, np.int32)
+            n = min(prompt_len, W)
+            pp = np.arange(prompt_len - n, prompt_len)
+            pos[pp % W] = pp
+            pos = jnp.asarray(pos)
+            if lead:
+                nu = c["k"].shape[0]
+                pos = jnp.broadcast_to(pos[None], (nu, W))
+            out["pos"] = pos
+        return out
+
+    out: dict = {}
+    for grp, sub in caches.items():
+        if grp == "stack":
+            out[grp] = {bj: fix(sl, 1) for bj, sl in sub.items()}
+        else:
+            out[grp] = {i: fix(sl, 0) for i, sl in sub.items()}
+    return out

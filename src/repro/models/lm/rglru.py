@@ -1,0 +1,108 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Block: norm -> { gate branch: linear+GELU } * { rec branch: linear -> causal
+conv1d(4) -> RG-LRU } -> out proj.  The RG-LRU:
+
+    r_t = sigmoid(alpha_r * x_t + b_r)          (per-channel gates — see
+    i_t = sigmoid(alpha_i * x_t + b_i)           DESIGN.md: diagonal gate
+    a_t = exp(-c * softplus(lam) * r_t)          simplification)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` (log-depth); decode is a
+single recurrent step.  State stays O(B*W) — the "DHM-like" streaming module
+of this architecture (weights + state resident on-chip).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.common import Schema
+from repro.models.lm.sharding import lc
+
+C_FACTOR = 8.0
+CONV_W = 4
+
+
+def rglru_schema(d: int, w: int) -> Schema:
+    return {
+        "w_gate": ((d, w), ("embed", "rnn"), "normal"),
+        "w_rec": ((d, w), ("embed", "rnn"), "normal"),
+        "conv/k": ((CONV_W, w), (None, "rnn"), "normal"),
+        "conv/b": ((w,), ("rnn",), "zeros"),
+        "lru/alpha_r": ((w,), ("rnn",), "normal"),
+        "lru/b_r": ((w,), ("rnn",), "zeros"),
+        "lru/alpha_i": ((w,), ("rnn",), "normal"),
+        "lru/b_i": ((w,), ("rnn",), "zeros"),
+        "lru/lam": ((w,), ("rnn",), "ones"),
+        "w_out": ((w, d), ("rnn", "embed"), "normal"),
+    }
+
+
+def _gates(p, x):
+    """x (..., w) -> (a, b) of the affine recurrence h = a*h_prev + b (fp32)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf * p["lru"]["alpha_r"].astype(jnp.float32)
+                       + p["lru"]["b_r"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf * p["lru"]["alpha_i"].astype(jnp.float32)
+                       + p["lru"]["b_i"].astype(jnp.float32))
+    log_a = -C_FACTOR * jax.nn.softplus(p["lru"]["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (i * xf)
+    return a, b
+
+
+def _causal_conv(p, x, state=None):
+    """Depthwise causal conv width 4.  x (B,S,w).  state (B,3,w) for decode."""
+    k = p["conv"]["k"].astype(jnp.float32)
+    if state is None:
+        pad = jnp.pad(x, ((0, 0), (CONV_W - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    xf = pad.astype(jnp.float32)
+    s = x.shape[1]
+    out = sum(xf[:, j:j + s] * k[j] for j in range(CONV_W))
+    out = out + p["conv"]["b"].astype(jnp.float32)
+    new_state = pad[:, -(CONV_W - 1):]
+    return out.astype(x.dtype), new_state
+
+
+def rglru_apply(p, x, state=None):
+    """x (B,S,d).  state None (train) or dict (decode/carry-over).
+
+    Returns (out (B,S,d), new_state).
+    """
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, p["w_gate"]).astype(jnp.float32))
+    rec = jnp.einsum("bsd,dw->bsw", x, p["w_rec"])
+    rec = lc(rec, "batch", None, "rnn")
+    conv_state = None if state is None else state["conv"]
+    rec, new_conv = _causal_conv(p, rec, conv_state)
+    a, b = _gates(p, rec)
+
+    if x.shape[1] == 1 and state is not None:
+        h = a[:, 0] * state["h"] + b[:, 0]               # (B, w) fp32
+        hs = h[:, None]
+        new_h = h
+    else:
+        if state is not None:
+            # fold carried state into the first step
+            b = b.at[:, 0].add(a[:, 0] * state["h"])
+
+        def comb(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+
+        a_sc, hs = jax.lax.associative_scan(comb, (a, b), axis=1)
+        del a_sc
+        new_h = hs[:, -1]
+
+    out = (gate * hs).astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", out, p["w_out"])
+    return out, {"h": new_h, "conv": new_conv}
+
+
+def rglru_init_state(batch: int, w: int):
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, CONV_W - 1, w), jnp.bfloat16)}

@@ -1,0 +1,107 @@
+"""Logical-axis sharding: t5x-style rules mapping logical axes -> mesh axes.
+
+Model code annotates params/activations with *logical* axis names; an
+``AxisRules`` object (built per (config, mesh)) resolves them to
+``PartitionSpec``s.  With no active rules every annotation is a no-op, so the
+same model code runs unsharded on one CPU device for smoke tests.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_CTX = threading.local()
+
+
+class AxisRules:
+    """Resolve logical axis names to mesh axes for a given policy/mesh."""
+
+    def __init__(self, mesh, policy, moe=None):
+        names = tuple(mesh.axis_names) if mesh is not None else ()
+        self.mesh = mesh
+        self.policy = policy
+        has = lambda a: a in names
+        batch = tuple(a for a in policy.batch_axes if has(a))
+        tp = "model" not in policy.batch_axes
+        ep = tuple(a for a in (moe.ep_axes if moe else ()) if has(a))
+        self.table: dict[str, tuple[str, ...] | None] = {
+            # --- weights ---
+            "embed": ("data",) if (policy.fsdp and has("data")) else None,
+            "heads": ("model",) if (has("model") and tp) else None,
+            "kv_heads": (None if policy.kv_replicated else
+                         (("model",) if (has("model") and tp) else None)),
+            "ffn": ("model",) if (has("model") and tp) else None,
+            "vocab": (("model",) if (policy.shard_vocab and has("model")
+                                     and tp) else None),
+            "experts": ep or None,
+            "rnn": ("model",) if (has("model") and tp) else None,
+            # expert-weight d_model dim: FSDP over data unless EP already
+            # occupies the data axis (deepseek: experts span data x model)
+            "embed_ep": (("data",) if (policy.fsdp and has("data")
+                                       and "data" not in ep) else None),
+            "layers": None,
+            "head_dim": None,
+            "none": None,
+            # --- activations ---
+            "batch": batch or None,
+            # flattened (batch*seq) token dim: batch axes + model (SP layout)
+            "tokens": tuple(dict.fromkeys(
+                batch + (("model",) if has("model") else ()))) or None,
+            "seq": None,
+            "seq_sp": (("model",) if (policy.seq_parallel and has("model")
+                                      and tp) else None),
+            # KV-cache sequence dim for caches with no head dim to shard
+            # (MLA latent cache): sequence-parallel decode attention
+            "seq_kv": ("model",) if (has("model") and tp) else None,
+            "act_embed": None,
+        }
+
+    def spec(self, *axes) -> P:
+        parts = []
+        for a in axes:
+            if a is None:
+                parts.append(None)
+                continue
+            m = self.table.get(a)
+            if m is None:
+                parts.append(None)
+            elif len(m) == 1:
+                parts.append(m[0])
+            else:
+                parts.append(m)
+        return P(*parts)
+
+
+@contextmanager
+def use_rules(rules: AxisRules | None):
+    prev = getattr(_CTX, "rules", None)
+    _CTX.rules = rules
+    try:
+        yield
+    finally:
+        _CTX.rules = prev
+
+
+def current_rules() -> AxisRules | None:
+    return getattr(_CTX, "rules", None)
+
+
+def lc(x, *axes):
+    """Logical sharding constraint on an activation (no-op without rules)."""
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, rules.spec(*axes))
+
+
+def specs_from_axes(axes_tree, rules: AxisRules):
+    """Map a pytree of logical-axes tuples to PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes: rules.spec(*axes),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x),
+    )

@@ -1,0 +1,232 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM (scalar
+memory, sequential scan).  [arXiv:2405.04517]
+
+mLSTM is the linear-complexity workhorse (chunked linear attention with
+exponential input gates and forget-gate decay); sLSTM keeps a recurrent
+hidden-to-gate connection and therefore scans sequentially.  Both expose a
+single-step recurrent form for decode (state is O(B*H*dk*dv) resp. O(B*d)),
+which is what makes the 500k-token decode cell runnable.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.common import Schema, prefix_schema
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_schema(d: int, n_heads: int) -> Schema:
+    dm = 2 * d     # up-projection factor 2
+    return {
+        "w_up": ((d, dm), ("embed", "ffn"), "normal"),
+        "w_gate_up": ((d, dm), ("embed", "ffn"), "normal"),
+        "wq": ((dm, dm), ("ffn", None), "normal"),
+        "wk": ((dm, dm), ("ffn", None), "normal"),
+        "wv": ((dm, dm), ("ffn", None), "normal"),
+        "w_if": ((dm, 2 * n_heads), ("ffn", None), "normal"),
+        "b_if": ((2 * n_heads,), (None,), "zeros"),
+        "w_down": ((dm, d), ("ffn", "embed"), "normal"),
+    }
+
+
+def _mlstm_chunk(q, k, v, ig, lf, carry):
+    """One chunk, one head-batch.  q,k,v (B,H,L,dk/dv) any float dtype —
+    upcast HERE so the full-sequence tensors stay bf16 (§Perf: full-seq fp32
+    q/k/v dominated prefill memory traffic); ig,lf (B,H,L) fp32.
+
+    carry = (C (B,H,dk,dv), n (B,H,dk), m (B,H)).  Returns (h, new_carry).
+    """
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    B, H, L, dk = q.shape
+    b = jnp.cumsum(lf, axis=-1)                        # inclusive log-decay
+    btot = b[..., -1]
+    # intra-chunk log weights a_ij = b_i - b_j + ig_j  (j <= i)
+    aij = b[..., :, None] - b[..., None, :] + ig[..., None, :]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    aij = jnp.where(tri, aij, -jnp.inf)
+    m_intra = aij.max(axis=-1)                         # (B,H,L)
+    C, n, m = carry
+    m_inter = m[..., None] + b                         # (B,H,L)
+    m_i = jnp.maximum(m_inter, m_intra)
+    m_i = jnp.maximum(m_i, -60.0)                      # numeric floor
+    w_inter = jnp.exp(m_inter - m_i)                   # (B,H,L)
+    p_intra = jnp.exp(aij - m_i[..., None])            # (B,H,L,L)
+    qs = q / math.sqrt(dk)
+    num = (w_inter[..., None] * jnp.einsum("bhld,bhdv->bhlv", qs, C)
+           + jnp.einsum("bhlj,bhjv->bhlv", p_intra * jnp.einsum(
+               "bhld,bhjd->bhlj", qs, k), v))
+    den = (w_inter * jnp.einsum("bhld,bhd->bhl", qs, n)
+           + jnp.einsum("bhlj,bhlj->bhl", p_intra,
+                        jnp.einsum("bhld,bhjd->bhlj", qs, k)))
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+    # state update
+    m_new = jnp.maximum(m + btot, (btot[..., None] - b + ig).max(axis=-1))
+    m_new = jnp.maximum(m_new, -60.0)
+    wk = jnp.exp(btot[..., None] - b + ig - m_new[..., None])   # (B,H,L)
+    C_new = (jnp.exp(m + btot - m_new)[..., None, None] * C
+             + jnp.einsum("bhj,bhjd,bhjv->bhdv", wk, k, v))
+    n_new = (jnp.exp(m + btot - m_new)[..., None] * n
+             + jnp.einsum("bhj,bhjd->bhd", wk, k))
+    return h, (C_new, n_new, m_new)
+
+
+def mlstm_seq(q, k, v, ig, lf, carry, chunk: int = 64):
+    """Chunkwise scan over the sequence.  q,k,v (B,S,H,dh); ig,lf (B,S,H)."""
+    B, S, H, dh = q.shape
+    chunk = min(chunk, S)
+    nc = S // chunk
+    assert S % chunk == 0
+
+    def to_chunks(x):
+        return (x.transpose(0, 2, 1, 3).reshape(B, H, nc, chunk, -1)
+                .transpose(2, 0, 1, 3, 4))
+
+    qc, kc, vc = map(to_chunks, (q, k, v))
+    igc = ig.transpose(0, 2, 1).reshape(B, H, nc, chunk).transpose(2, 0, 1, 3)
+    lfc = lf.transpose(0, 2, 1).reshape(B, H, nc, chunk).transpose(2, 0, 1, 3)
+
+    @jax.checkpoint
+    def body(c, xs):
+        qi, ki, vi, igi, lfi = xs
+        h, c = _mlstm_chunk(qi, ki, vi, igi, lfi, c)
+        return c, h
+
+    carry, hs = jax.lax.scan(body, carry, (qc, kc, vc, igc, lfc))
+    # hs: (nc, B, H, L, dv) -> (B, S, H, dv)
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, -1).transpose(0, 2, 1, 3)
+    return h, carry
+
+
+def mlstm_step(q, k, v, ig, lf, carry):
+    """Single decode step.  q,k,v (B,H,dh); ig,lf (B,H)."""
+    C, n, m = carry
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    dk = q.shape[-1]
+    m_new = jnp.maximum(m + lf, ig)
+    m_new = jnp.maximum(m_new, -60.0)
+    wf = jnp.exp(m + lf - m_new)
+    wi = jnp.exp(ig - m_new)
+    C = wf[..., None, None] * C + wi[..., None, None] * jnp.einsum(
+        "bhd,bhv->bhdv", k, v)
+    n = wf[..., None] * n + wi[..., None] * k
+    qs = q / math.sqrt(dk)
+    num = jnp.einsum("bhd,bhdv->bhv", qs, C)
+    den = jnp.einsum("bhd,bhd->bh", qs, n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return h, (C, n, m_new)
+
+
+def mlstm_init_state(batch: int, n_heads: int, dh: int):
+    return (jnp.zeros((batch, n_heads, dh, dh), jnp.float32),
+            jnp.zeros((batch, n_heads, dh), jnp.float32),
+            jnp.full((batch, n_heads), -60.0, jnp.float32))
+
+
+def mlstm_apply(p, x, n_heads: int, state=None):
+    """Full mLSTM block.  x (B,S,d) -> (out, new_state).
+
+    Full-sequence intermediates are sharded over the model axis on their
+    inner (head_dim) dim — xLSTM has too few heads for head sharding, but
+    dh = 2*d/n_heads divides a 16-way axis (§Perf cell 3).
+    """
+    from repro.models.lm.sharding import lc
+    B, S, d = x.shape
+    up = lc(jnp.einsum("bsd,dm->bsm", x, p["w_up"]), "batch", None, "rnn")
+    gate = jax.nn.silu(jnp.einsum(
+        "bsd,dm->bsm", x, p["w_gate_up"]).astype(jnp.float32)).astype(x.dtype)
+    gate = lc(gate, "batch", None, "rnn")
+    dm = up.shape[-1]
+    dh = dm // n_heads
+
+    def heads(w):
+        # stays in model dtype at full sequence length; chunks upcast
+        h = jnp.einsum("bsm,mn->bsn", up, w).reshape(B, S, n_heads, dh)
+        return lc(h, "batch", None, None, "rnn")
+
+    q, k, v = heads(p["wq"]), heads(p["wk"]), heads(p["wv"])
+    if_ = (jnp.einsum("bsm,mh->bsh", up, p["w_if"])
+           .astype(jnp.float32) + p["b_if"].astype(jnp.float32))
+    ig, fg = jnp.split(if_, 2, axis=-1)                 # (B,S,H)
+    lf = jax.nn.log_sigmoid(fg)
+
+    if state is None:
+        state = mlstm_init_state(B, n_heads, dh)
+    if S == 1:
+        h, state = mlstm_step(q[:, 0], k[:, 0], v[:, 0], ig[:, 0], lf[:, 0],
+                              state)
+        h = h[:, None]
+    else:
+        h, state = mlstm_seq(q, k, v, ig, lf, state)
+    h = h.reshape(B, S, dm).astype(x.dtype) * gate
+    return jnp.einsum("bsm,md->bsd", h, p["w_down"]), state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_schema(d: int, n_heads: int) -> Schema:
+    dh = d // n_heads
+    return {
+        "w": ((d, 4 * d), ("embed", "ffn"), "normal"),
+        "b": ((4 * d,), (None,), "zeros"),
+        "r": ((n_heads, dh, 4 * dh), (None, None, None), "normal"),
+        "w_out": ((d, d), ("ffn", "embed"), "normal"),
+    }
+
+
+def slstm_init_state(batch: int, d: int):
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z + 1e-6, "h": z, "m": z - 60.0}
+
+
+def _slstm_cell(p, wx, st, n_heads: int):
+    """wx (B,4d) precomputed W x + b (fp32).  st: dict of (B,d)."""
+    B, d4 = wx.shape
+    d = d4 // 4
+    dh = d // n_heads
+    hr = st["h"].reshape(B, n_heads, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hr, p["r"].astype(jnp.float32))
+    pre = wx + rec.reshape(B, 4 * d)
+    zt, it, ft, ot = jnp.split(pre, 4, axis=-1)
+    zt = jnp.tanh(zt)
+    ot = jax.nn.sigmoid(ot)
+    m_new = jnp.maximum(jax.nn.log_sigmoid(ft) + st["m"], it)
+    m_new = jnp.maximum(m_new, -60.0)
+    i_ = jnp.exp(it - m_new)
+    f_ = jnp.exp(jax.nn.log_sigmoid(ft) + st["m"] - m_new)
+    c = f_ * st["c"] + i_ * zt
+    n = f_ * st["n"] + i_
+    h = ot * c / jnp.maximum(n, 1e-6)
+    return h, {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_apply(p, x, n_heads: int, state=None):
+    """x (B,S,d) -> (out, state).  Sequential lax.scan over time."""
+    B, S, d = x.shape
+    if state is None:
+        state = slstm_init_state(B, d)
+    wx = (jnp.einsum("bsd,de->bse", x, p["w"]).astype(jnp.float32)
+          + p["b"].astype(jnp.float32))
+
+    if S == 1:
+        h, state = _slstm_cell(p, wx[:, 0], state, n_heads)
+        hs = h[:, None]
+    else:
+        def body(st, wxt):
+            h, st = _slstm_cell(p, wxt, st, n_heads)
+            return st, h
+        state, hs = jax.lax.scan(body, state, wx.transpose(1, 0, 2))
+        hs = hs.transpose(1, 0, 2)
+    out = jnp.einsum("bsd,de->bse", hs.astype(x.dtype), p["w_out"])
+    return out, state

@@ -1,0 +1,53 @@
+"""8-bit fixed-point quantization — the paper's FPGA number format [2].
+
+Symmetric int8: per-channel scales for weights, per-tensor for activations.
+Used by (a) the hetero executor's FPGA substrate (DHM computes in int8),
+(b) the int8 Pallas GEMM kernel, and (c) the optional int8 serving path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x, axis=None, bits: int = 8):
+    """Returns (q int8, scale f32).  axis: per-channel axis (None = tensor)."""
+    qmax = 2.0 ** (bits - 1) - 1
+    if axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        red = tuple(i for i in range(x.ndim) if i != axis % x.ndim)
+        amax = jnp.max(jnp.abs(x), axis=red, keepdims=True)
+    scale = jnp.maximum(amax.astype(jnp.float32), 1e-8) / qmax
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax, qmax)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def fake_quant(x, axis=None, bits: int = 8):
+    q, s = quantize(x, axis, bits)
+    return dequantize(q, s).astype(x.dtype)
+
+
+def int8_matmul(x_q, x_scale, w_q, w_scale):
+    """int8 x int8 -> int32 accumulate -> f32 requantize.
+
+    x_q (m, k) int8; w_q (k, n) int8; w_scale per-channel (1, n) or scalar.
+    """
+    acc = jax.lax.dot_general(
+        x_q, w_q, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * x_scale * w_scale.reshape(1, -1)
+
+
+def quantize_params(params, axis=-1):
+    """int8-quantize every >=2D leaf of a param tree (serving path)."""
+    def q(p):
+        if p.ndim >= 2 and jnp.issubdtype(p.dtype, jnp.floating):
+            qq, s = quantize(p, axis=axis)
+            return {"q": qq, "scale": s}
+        return p
+    return jax.tree.map(q, params)

@@ -1,0 +1,4 @@
+from repro.train.steps import (  # noqa: F401
+    TrainState, cross_entropy, make_decode_fn, make_prefill_fn,
+    make_train_step, make_train_state,
+)

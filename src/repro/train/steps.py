@@ -1,0 +1,110 @@
+"""Step factories: training (remat + microbatched grad accumulation) and
+serving (prefill / decode).  All are pure functions of (state|params, batch)
+suitable for ``jax.jit`` with explicit in/out shardings.
+
+Microbatching: the global batch is split into ``microbatches`` slices and
+scanned; gradients accumulate in fp32.  XLA's latency-hiding scheduler
+overlaps the reduce-scatter of microbatch i with the compute of i+1 (enabled
+by launcher flags) — the paper's `max(compute, comm)` overlap at DC scale.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.lm import model as lm
+from repro.optim import Optimizer, apply_updates
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray
+    params: Any
+    opt_state: Any
+
+
+def make_train_state(cfg: ModelConfig, optimizer: Optimizer, key) -> TrainState:
+    params = lm.init_params(cfg, key)
+    return TrainState(jnp.zeros((), jnp.int32), params,
+                      optimizer.init(params))
+
+
+def cross_entropy(logits, labels, mask):
+    """logits (B,T,V) fp32, labels (B,T) int32, mask (B,T)."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return nll.sum() / denom
+
+
+def _loss_fn(cfg: ModelConfig, params, batch, hierarchy_levels: int = 0):
+    logits, _, aux = lm.forward(cfg, params, batch,
+                                hierarchy_levels=hierarchy_levels)
+    tokens = batch["tokens"]
+    extra = cfg.vlm_patches
+    txt_logits = logits[:, extra:-1] if extra else logits[:, :-1]
+    labels = tokens[:, 1:]
+    mask = jnp.ones(labels.shape, jnp.float32)
+    loss = cross_entropy(txt_logits.astype(jnp.float32), labels, mask)
+    aux_coef = cfg.moe.router_aux_coef if cfg.moe is not None else 0.0
+    return loss + aux_coef * aux, {"loss": loss, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer,
+                    microbatches: int = 1, hierarchy_levels: int = 0,
+                    accum_dtype=jnp.float32):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def grad_fn(params, mb):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: _loss_fn(cfg, p, mb, hierarchy_levels),
+            has_aux=True)(params)
+        return grads, metrics
+
+    def train_step(state: TrainState, batch: dict):
+        if microbatches == 1:
+            grads, metrics = grad_fn(state.params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape((microbatches, b // microbatches)
+                                 + x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                from repro.models.lm.sharding import lc
+                mb = jax.tree.map(
+                    lambda t: lc(t, "batch", *([None] * (t.ndim - 1))), mb)
+                g, m = grad_fn(state.params, mb)
+                acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(accum_dtype), acc, g)
+                return acc, m
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), state.params)
+            grads, ms = jax.lax.scan(body, zeros, mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = jax.tree.map(lambda m: m.mean(), ms)
+        updates, opt_state = optimizer.update(grads, state.opt_state,
+                                              state.params)
+        params = apply_updates(state.params, updates)
+        return TrainState(state.step + 1, params, opt_state), metrics
+
+    return train_step
+
+
+def make_prefill_fn(cfg: ModelConfig, hierarchy_levels: int = 0):
+    def prefill_fn(params, batch):
+        logits, caches, _ = lm.forward(cfg, params, batch, return_cache=True,
+                                       hierarchy_levels=hierarchy_levels)
+        return logits[:, -1:], caches
+    return prefill_fn
+
+
+def make_decode_fn(cfg: ModelConfig):
+    def decode_fn(params, cache, token, cache_len):
+        return lm.decode_step(cfg, params, cache, token, cache_len)
+    return decode_fn

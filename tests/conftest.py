@@ -1,0 +1,8 @@
+import os
+
+# smoke tests and benches see ONE device; only launch/dryrun.py forces 512
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,76 @@
+"""Property tests: every attention execution strategy computes the SAME
+function — chunked flash, hierarchical decomposition, banded local, and
+GQA with expanded KV all reduce to plain masked softmax attention."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+
+from repro.models.lm.attention import gqa_attention
+
+
+def _ref(q, k, v, causal=True, window=None):
+    B, S, H, D = q.shape
+    Kh = k.shape[2]
+    g = H // Kh
+    kf = jnp.repeat(k, g, axis=2)
+    vf = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kf) / jnp.sqrt(jnp.float32(D))
+    pos = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= pos[:, None] >= pos[None, :]
+    if window is not None:
+        mask &= (pos[:, None] - pos[None, :]) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+
+
+def _qkv(seed, B, S, H, Kh, D):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(ks[0], (B, S, H, D)),
+            jax.random.normal(ks[1], (B, S, Kh, D)),
+            jax.random.normal(ks[2], (B, S, Kh, D)))
+
+
+@given(st.integers(0, 1000), st.sampled_from([64, 128, 256]),
+       st.sampled_from([(4, 4), (4, 2), (8, 2)]))
+@settings(max_examples=12, deadline=None)
+def test_chunked_equals_reference(seed, S, heads):
+    H, Kh = heads
+    q, k, v = _qkv(seed, 2, S, H, Kh, 16)
+    out = gqa_attention(q, k, v, causal=True, impl="chunked",
+                        q_chunk=32, kv_chunk=32)
+    assert float(jnp.abs(out - _ref(q, k, v)).max()) < 1e-4
+
+
+@pytest.mark.parametrize("levels", [1, 2, 3])
+@pytest.mark.parametrize("S", [128, 256])
+def test_hierarchical_equals_plain(levels, S):
+    q, k, v = _qkv(7, 2, S, 4, 2, 16)
+    plain = gqa_attention(q, k, v, causal=True, impl="chunked",
+                          q_chunk=32, kv_chunk=32)
+    hier = gqa_attention(q, k, v, causal=True, impl="chunked",
+                         q_chunk=32, kv_chunk=32, hierarchy_levels=levels)
+    assert float(jnp.abs(plain - hier).max()) < 1e-4
+
+
+@pytest.mark.parametrize("window", [32, 64])
+def test_local_banded_equals_masked_reference(window):
+    S = 256
+    q, k, v = _qkv(11, 2, S, 4, 1, 16)
+    out = gqa_attention(q, k, v, causal=True, window=window, impl="local")
+    ref = _ref(q, k, v, causal=True, window=window)
+    assert float(jnp.abs(out - ref).max()) < 1e-4
+
+
+def test_expanded_kv_equals_gqa():
+    """jnp.repeat-expanded KV (the §Perf cell-1 change) is semantically
+    exactly GQA."""
+    q, k, v = _qkv(13, 2, 128, 8, 2, 16)
+    gqa = gqa_attention(q, k, v, causal=True, impl="chunked")
+    kf, vf = jnp.repeat(k, 4, axis=2), jnp.repeat(v, 4, axis=2)
+    mha = gqa_attention(q, kf, vf, causal=True, impl="chunked")
+    assert float(jnp.abs(gqa - mha).max()) < 1e-5

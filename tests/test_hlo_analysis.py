@@ -1,0 +1,41 @@
+"""The roofline's HLO analyzer must multiply scan bodies by trip count."""
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_analysis import analyze, shape_bytes
+
+
+def test_shape_bytes():
+    assert shape_bytes("bf16[64,64]{1,0}") == 64 * 64 * 2
+    assert shape_bytes("f32[10,256,64]") == 10 * 256 * 64 * 4
+    assert shape_bytes("(s32[], bf16[8,8])") == 4 + 128
+    assert shape_bytes("pred[]") == 1
+
+
+def test_scan_flops_trip_multiplied():
+    n_layers, m, k = 10, 64, 128
+
+    def f(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    x = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    w = jax.ShapeDtypeStruct((n_layers, k, k), jnp.float32)
+    compiled = jax.jit(f).lower(x, w).compile()
+    res = analyze(compiled.as_text())
+    expect = n_layers * 2 * m * k * k
+    assert 0.9 * expect <= res["flops_per_device"] <= 1.5 * expect, res
+
+
+def test_matmul_flops_counted_once_outside_scan():
+    def f(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+    compiled = jax.jit(f).lower(a, b).compile()
+    res = analyze(compiled.as_text())
+    expect = 2 * 128 * 256 * 64
+    assert 0.9 * expect <= res["flops_per_device"] <= 1.2 * expect

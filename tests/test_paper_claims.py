@@ -1,0 +1,102 @@
+"""Validation against the paper's own claims (EXPERIMENTS.md §Reproduction).
+
+The paper reports (abstract / Table I / Sec. V text — internally spread):
+  SqueezeNet   21-28% energy reduction, ~same latency        (Fire modules)
+  MobileNetV2  12-30% energy, 4-26% latency                  (bottlenecks)
+  ShuffleNetV2 ~25% energy, ~21-35% latency                  (stages)
+Our analytical models are calibrated to land in a broadened envelope and
+preserve the orderings; exact-point matching is impossible without their
+board (documented in DESIGN.md §5).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import costmodel as cm
+from repro.core.costmodel import ConvSpec
+from repro.core.graph import NETWORKS
+from repro.core.hetero import init_network, run_network
+from repro.core.partitioner import PAPER_SCHEMES, candidates, partition_network
+
+ENVELOPES = {           # family-mean module gains (broad: model uncertainty)
+    "squeezenet": ((1.10, 2.20), (0.90, 1.60)),
+    "mobilenetv2": ((1.15, 2.60), (0.80, 1.50)),
+    "shufflenetv2": ((1.10, 2.20), (0.90, 1.60)),
+}
+
+
+def family_mean_gains(net):
+    es, ls = [], []
+    for m in NETWORKS[net]():
+        if m.kind in ("stem", "head"):
+            continue
+        cands = [p for p in candidates(m)
+                 if p.scheme in PAPER_SCHEMES.get(m.kind, ())
+                 and p.res.macs <= cm.FPGA.mac_budget]
+        if not cands:
+            continue
+        best = min(cands, key=lambda p: p.cost.energy * p.cost.latency)
+        es.append(best.energy_gain)
+        ls.append(best.speedup)
+    return sum(es) / len(es), sum(ls) / len(ls)
+
+
+@pytest.mark.parametrize("net", list(ENVELOPES))
+def test_module_gains_inside_paper_envelope(net):
+    (e_lo, e_hi), (l_lo, l_hi) = ENVELOPES[net]
+    e, lat = family_mean_gains(net)
+    assert e_lo <= e <= e_hi, f"{net} energy gain {e:.2f}"
+    assert l_lo <= lat <= l_hi, f"{net} speedup {lat:.2f}"
+
+
+def test_every_family_has_positive_hetero_gain():
+    for net in NETWORKS:
+        e, _ = family_mean_gains(net)
+        assert e > 1.05
+
+
+def test_fig1_fpga_beats_gpu_on_small_convs():
+    """Fig. 1: on 224x224x3 inputs the FPGA's energy advantage grows with
+    the filter count ("this effect increases with the number of kernel
+    filters") and is decisive from ~8 filters up; latency wins at the top
+    end of the sweep."""
+    for k in (3, 5):                       # Fig.1 sweeps conv kernel sizes
+        ratios = []
+        for n in (2, 8, 16, 64):
+            spec = ConvSpec("conv", 224, 224, 3, n, k=k)
+            g = cm.GPU.op_cost(spec)
+            f = cm.FPGA.full_unroll_cost(spec)
+            ratios.append(g.energy / f.energy)
+            if n >= 8:
+                assert f.energy < g.energy, (k, n)
+        assert ratios == sorted(ratios), f"gap must grow with n (k={k})"
+        assert ratios[-1] > 3.0            # decisive at 64 filters
+    # latency win at the paper's quoted ceiling case: 64 filters of 5x5
+    spec = ConvSpec("conv", 224, 224, 3, 64, k=5)
+    assert cm.FPGA.full_unroll_cost(spec).latency \
+        < cm.GPU.op_cost(spec).latency
+
+
+def test_hetero_execution_matches_reference():
+    """Plans are runnable and numerically faithful (int8 on FPGA nodes)."""
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(1), (1, 224, 224, 3))
+    for net, builder in NETWORKS.items():
+        mods = builder()
+        params = init_network(mods, jax.random.PRNGKey(0))
+        ref = run_network(mods, params, x)
+        plans = partition_network(mods, paper_faithful=True)
+        het = run_network(mods, params, x, plans)
+        cos = float(jnp.sum(ref * het)
+                    / (jnp.linalg.norm(ref) * jnp.linalg.norm(het) + 1e-9))
+        assert cos > 0.995, net
+
+
+def test_comm_overhead_is_accounted():
+    """A plan's cost includes PCIe: offloading with a free link would always
+    win; with the real link some candidates must become inadmissible."""
+    mods = NETWORKS["squeezenet"]()
+    all_cands = [p for m in mods for p in candidates(m)
+                 if p.scheme != "gpu_only"]
+    worse_latency = [p for p in all_cands
+                     if p.cost.latency > p.gpu_only.latency * 1.05]
+    assert worse_latency, "PCIe cost never binding — comm model broken"

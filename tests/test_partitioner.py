@@ -1,0 +1,92 @@
+"""Partitioner invariants — hypothesis property tests on the paper's core."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import costmodel as cm
+from repro.core.costmodel import ConvSpec
+from repro.core.graph import NETWORKS, fire
+from repro.core.partitioner import candidates, partition_network
+from repro.core.schedule import split_spec_in
+
+spec_st = st.builds(
+    ConvSpec,
+    kind=st.sampled_from(["conv", "pwconv", "dwconv"]),
+    h=st.sampled_from([7, 14, 28, 56, 112]),
+    w=st.sampled_from([7, 14, 28, 56, 112]),
+    c_in=st.integers(3, 256),
+    c_out=st.integers(8, 256),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+)
+
+
+@given(spec_st)
+@settings(max_examples=60, deadline=None)
+def test_costs_positive_and_energy_consistent(spec):
+    g = cm.GPU.op_cost(spec)
+    f = cm.FPGA.op_cost(spec)
+    assert g.latency > 0 and g.energy > 0
+    assert f.latency > 0 and f.energy > 0
+    # dynamic MAC energy never exceeds total FPGA energy
+    assert f.energy >= spec.macs * cm.FPGA.mac_energy
+
+
+@given(spec_st, st.integers(1, 8))
+@settings(max_examples=40, deadline=None)
+def test_fpga_gpar_speeds_up_never_changes_mac_energy(spec, g_par):
+    c1 = cm.FPGA.op_cost(spec, 1)
+    cg = cm.FPGA.op_cost(spec, g_par)
+    assert cg.latency <= c1.latency + 1e-12
+    # same MACs executed -> dynamic energy identical; static scales with time
+    assert cg.energy <= c1.energy + 1e-12
+
+
+@given(spec_st, st.floats(0.1, 0.9))
+@settings(max_examples=40, deadline=None)
+def test_gconv_split_conserves_channels_and_macs(spec, frac):
+    if spec.c_in < 4:
+        return
+    f, g = split_spec_in(spec, frac)
+    assert f.c_in + g.c_in == spec.c_in
+    assert f.c_in >= 1 and g.c_in >= 1
+    if spec.kind != "dwconv":
+        assert abs((f.macs + g.macs) - spec.macs) / spec.macs < 1e-6
+
+
+@pytest.mark.parametrize("net", list(NETWORKS))
+def test_network_plans_respect_budgets_and_latency(net):
+    mods = NETWORKS[net]()
+    plans = partition_network(mods, objective="paper", latency_slack=1.05)
+    tot_macs = sum(p.res.macs for p in plans)
+    tot_bytes = sum(p.res.bytes for p in plans)
+    assert tot_macs <= cm.FPGA.mac_budget
+    assert tot_bytes <= cm.FPGA.onchip_bytes
+    for p in plans:
+        if p.scheme != "gpu_only":
+            assert p.cost.latency <= p.gpu_only.latency * 1.05 + 1e-9
+            assert p.cost.energy < p.gpu_only.energy
+
+
+def test_candidates_include_paper_schemes():
+    m = fire("fire_t", 28, 128, 32, 128)
+    schemes = {p.scheme for p in candidates(m)}
+    assert {"gpu_only", "parallel_branch", "gconv_split",
+            "fpga_fused"} <= schemes
+
+
+def test_fig1_full_unroll_ceiling():
+    """Paper Fig.1: 64 filters of 5x5 on 224x224x3 fit; 128 do not."""
+    ok = ConvSpec("conv", 224, 224, 3, 64, k=5)
+    over = ConvSpec("conv", 224, 224, 3, 128, k=5)
+    assert cm.FPGA.fits_full_unroll(ok)
+    assert not cm.FPGA.fits_full_unroll(over)
+
+
+def test_objective_modes_order():
+    mods = NETWORKS["mobilenetv2"]()
+    for objective in ("paper", "latency", "edp"):
+        plans = partition_network(mods, objective=objective)
+        assert len(plans) == len(mods)
+    gpu = partition_network(mods, objective="gpu_only")
+    assert all(p.scheme == "gpu_only" for p in gpu)

@@ -1,0 +1,55 @@
+"""int8 fixed-point properties (hypothesis)."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.optim import compress_int8, decompress_int8
+from repro.quant import dequantize, fake_quant, int8_matmul, quantize
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.01, 100.0))
+@settings(max_examples=30, deadline=None)
+def test_quant_roundtrip_error_bounded(seed, scale_mag):
+    x = scale_mag * jax.random.normal(jax.random.PRNGKey(seed), (64, 32))
+    q, s = quantize(x)
+    err = jnp.abs(dequantize(q, s) - x)
+    assert float(err.max()) <= float(s) * 0.5 + 1e-6
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_per_channel_beats_or_ties_per_tensor(seed):
+    k = jax.random.PRNGKey(seed)
+    # heterogeneous channel magnitudes
+    scales = jnp.exp(jax.random.normal(jax.random.fold_in(k, 1), (1, 16)) * 2)
+    w = jax.random.normal(k, (64, 16)) * scales
+    err_pc = float(jnp.abs(fake_quant(w, axis=-1) - w).mean())
+    err_pt = float(jnp.abs(fake_quant(w) - w).mean())
+    assert err_pc <= err_pt * 1.05
+
+
+def test_int8_matmul_close_to_fp32():
+    a = jax.random.normal(jax.random.PRNGKey(0), (64, 128))
+    w = jax.random.normal(jax.random.PRNGKey(1), (128, 32))
+    aq, asc = quantize(a)
+    wq, wsc = quantize(w, axis=-1)
+    out = int8_matmul(aq, asc, wq, wsc)
+    rel = float(jnp.abs(out - a @ w).max() / jnp.abs(a @ w).max())
+    assert rel < 0.05
+
+
+def test_int8_grad_compression_error_feedback():
+    """Error feedback makes compressed-grad SGD track true SGD on average."""
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.normal(size=(1000,)) * 0.1)
+    err = jnp.zeros_like(g_true)
+    acc_c, acc_t = jnp.zeros_like(g_true), jnp.zeros_like(g_true)
+    for step in range(30):
+        g = g_true + 0.01 * jnp.asarray(rng.normal(size=(1000,)))
+        q, s, err = compress_int8(g, err)
+        acc_c = acc_c + decompress_int8(q, s)
+        acc_t = acc_t + g
+    rel = float(jnp.linalg.norm(acc_c - acc_t) / jnp.linalg.norm(acc_t))
+    assert rel < 0.02     # error feedback keeps the accumulated drift tiny

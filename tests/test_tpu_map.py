@@ -1,0 +1,28 @@
+"""TPU substrate selection — the paper's decision structure on v5e."""
+import pytest
+
+from repro.core.graph import NETWORKS
+from repro.core.tpu_map import plan_network, summarize, vmem_usage
+
+
+@pytest.mark.parametrize("net", list(NETWORKS))
+def test_tpu_plans_are_sound(net):
+    mods = NETWORKS[net]()
+    plans = plan_network(mods)
+    for p in plans:
+        if p.substrate == "fused":
+            # a fused choice must actually be a predicted win and fit VMEM
+            assert p.t_fused <= p.t_generic
+            assert p.vmem_bytes <= 64 * 2**20
+    s = summarize(plans)
+    assert s["speedup"] >= 1.0
+    # mobile CNNs are bandwidth-bound on a 197-TFLOP chip: fusion must win
+    # somewhere on every one of the paper's networks
+    assert s["fused_modules"] >= 1
+
+
+def test_fusion_speedup_is_meaningful():
+    mods = NETWORKS["mobilenetv2"]()
+    s = summarize(plan_network(mods))
+    # dw/pw chains are heavily memory-bound: expect a solid win
+    assert s["speedup"] > 1.5, s
