@@ -5,11 +5,15 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fig4   per-network hetero vs GPU-only energy/latency         (paper Fig.4)
   table1 module-family gains vs the paper's reported numbers   (paper Tab.I)
   beyond beyond-paper budgeted partitioner (all schemes)       (§Perf)
+  hetero_exec interpreted vs compiled plan execution, batch 1/8/32
   kernels wall-clock of the kernel reference paths on this host
   roofline per-cell dry-run roofline terms                     (§Roofline)
+
+``python benchmarks/run.py [section ...]`` runs a subset (default: all).
 """
 from __future__ import annotations
 
+import sys
 import time
 
 import jax
@@ -102,6 +106,32 @@ def _time(fn, *args, reps=5):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
+def hetero_exec_rows(batches=(1, 8, 32), res=96):
+    """The engine's reason to exist: the same (modules, plans) pair through
+    the unjitted per-node interpreter vs the jit-once compiled executor
+    (weights quantized at compile time, fused/int8 kernel routing)."""
+    from repro.core.executor import compile_network
+    from repro.core.graph import NETWORKS
+    from repro.core.hetero import init_network, run_network
+    from repro.core.partitioner import partition_network
+    rows = []
+    for net, builder in NETWORKS.items():
+        mods = builder()
+        plans = partition_network(mods, paper_faithful=True)
+        params = init_network(mods, jax.random.PRNGKey(0))
+        engine = compile_network(mods, plans)
+        prepared = engine.prepare(params)
+        for b in batches:
+            x = jax.random.normal(jax.random.PRNGKey(1), (b, res, res, 3))
+            t_i = _time(lambda: run_network(mods, params, x, plans), reps=2)
+            t_c = _time(lambda: engine(prepared, x), reps=5)
+            rows.append((f"hetero_exec/{net}/b{b}/interpreted", t_i,
+                         f"res={res}"))
+            rows.append((f"hetero_exec/{net}/b{b}/compiled", t_c,
+                         f"res={res};speedup={t_i / t_c:.1f}x"))
+    return rows
+
+
 def kernel_bench():
     from repro.kernels.flash_attention.ref import attention
     from repro.kernels.fused_block.ref import fused_dw_pw
@@ -160,11 +190,27 @@ def roofline_rows():
         return [("roofline/unavailable", 0.0, f"run dryrun first ({e})")]
 
 
-def main() -> None:
+SECTIONS = {
+    "fig1": fig1_conv_sweep,
+    "fig4": fig4_models,
+    "table1": table1_gains,
+    "beyond": beyond_paper,
+    "tpu_map": tpu_map_rows,
+    "hetero_exec": hetero_exec_rows,
+    "kernels": kernel_bench,
+    "roofline": roofline_rows,
+}
+
+
+def main(argv: list[str] | None = None) -> None:
+    names = (argv if argv else sys.argv[1:]) or list(SECTIONS)
+    unknown = [n for n in names if n not in SECTIONS]
+    if unknown:
+        raise SystemExit(f"unknown section(s) {unknown}; "
+                         f"choose from {list(SECTIONS)}")
     print("name,us_per_call,derived")
-    for fn in (fig1_conv_sweep, fig4_models, table1_gains, beyond_paper,
-               tpu_map_rows, kernel_bench, roofline_rows):
-        for name, us, derived in fn():
+    for n in names:
+        for name, us, derived in SECTIONS[n]():
             print(f"{name},{us:.1f},{derived}")
 
 

@@ -1,11 +1,20 @@
-"""Executable heterogeneous plans: run a ModuleGraph in JAX with substrate
-routing.  "gpu" nodes compute in fp32/bf16; "fpga" nodes go through the
-paper's 8-bit fixed-point path (per-channel weight + per-tensor activation
-quantization, via repro.quant).  GConv splits execute both channel slices
-and sum partials — so every Plan is runnable and testable against the
-monolithic fp32 network, not just priced.
+"""Interpreted reference executor for heterogeneous plans.
+
+Runs a ModuleGraph in JAX with substrate routing, node by node in Python:
+"gpu" nodes compute in fp32/bf16; "fpga" nodes go through the paper's 8-bit
+fixed-point path (per-channel weight + per-tensor activation quantization,
+via repro.quant).  GConv splits execute both channel slices and sum partials
+— so every Plan is runnable and testable against the monolithic fp32
+network, not just priced.
+
+This is deliberately the SLOW, readable oracle: unjitted, re-quantizing
+weights on every call.  The production path is ``repro.core.executor``,
+which lowers the same (modules, plans) pair once into a single jitted
+callable and is parity-tested against ``run_network`` here.
 """
 from __future__ import annotations
+
+import zlib
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +26,7 @@ from repro.core.schedule import Plan
 from repro.quant import fake_quant
 
 
-def _act(x, kind: str):
+def apply_act(x, kind: str):
     if kind == "relu":
         return jax.nn.relu(x)
     if kind == "relu6":
@@ -43,8 +52,11 @@ def _conv_params(key, spec: ConvSpec):
 def init_network(mods: list[ModuleGraph], key) -> dict:
     params: dict = {}
     for m in mods:
-        keys = jax.random.split(jax.random.fold_in(key, hash(m.name) % 2**31),
-                                len(m.nodes))
+        # crc32, not hash(): builtin str hashing is salted per process, which
+        # would make "identical" networks draw different weights across runs
+        keys = jax.random.split(
+            jax.random.fold_in(key, zlib.crc32(m.name.encode()) % 2**31),
+            len(m.nodes))
         params[m.name] = {}
         for n, k in zip(m.nodes, keys):
             p = _conv_params(k, n.spec)
@@ -61,13 +73,13 @@ def _run_conv(n: Node, p, x, quantized: bool):
         w = fake_quant(w, axis=-1)
     if spec.kind == "fc":
         y = x.reshape(x.shape[0], -1) @ w + p["b"]
-        return _act(y, n.act)
+        return apply_act(y, n.act)
     groups = spec.c_in if spec.kind == "dwconv" else spec.groups
     y = jax.lax.conv_general_dilated(
         x, w, window_strides=(spec.stride, spec.stride), padding="SAME",
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
         feature_group_count=groups)
-    return _act(y + p["b"], n.act)
+    return apply_act(y + p["b"], n.act)
 
 
 def _run_node(n: Node, params_m, values, assign, gconv):
@@ -86,7 +98,7 @@ def _run_node(n: Node, params_m, values, assign, gconv):
             nf = Node(n.name, spec, n.inputs, "none")
             y = (_run_conv(nf, p_f, x_f, True)
                  + _run_conv(nf, p_g, x_g, False))
-            return _act(y, n.act)
+            return apply_act(y, n.act)
         return _run_conv(n, params_m[n.name], x, quantized)
     if spec.kind == "maxpool":
         return jax.lax.reduce_window(

@@ -201,11 +201,21 @@ PAPER_SCHEMES = {
 }
 
 
+VALID_OBJECTIVES = ("paper", "gpu_only", "latency", "edp")
+
+
+def _edp(c: Cost) -> float:
+    return c.energy * c.latency
+
+
 def partition_network(modules: list[ModuleGraph], objective: str = "paper",
                       latency_slack: float = 1.05,
                       mac_budget: int | None = None,
                       byte_budget: int | None = None,
                       paper_faithful: bool = False) -> list[Plan]:
+    if objective not in VALID_OBJECTIVES:
+        raise ValueError(f"unknown objective {objective!r}; "
+                         f"expected one of {VALID_OBJECTIVES}")
     mac_budget = cm.FPGA.mac_budget if mac_budget is None else mac_budget
     byte_budget = cm.FPGA.onchip_bytes if byte_budget is None else byte_budget
 
@@ -233,7 +243,15 @@ def partition_network(modules: list[ModuleGraph], objective: str = "paper",
                 continue
             if objective == "latency" and p.cost.latency >= p.gpu_only.latency:
                 continue
-            density = p.saving / max(p.res.macs + p.res.bytes / 64.0, 1.0)
+            if objective == "edp":
+                # energy-delay product: only admit plans that strictly
+                # improve EDP, and rank by EDP saved per resident resource
+                saving = _edp(p.gpu_only) - _edp(p.cost)
+                if saving <= 0:
+                    continue
+            else:
+                saving = p.saving
+            density = saving / max(p.res.macs + p.res.bytes / 64.0, 1.0)
             options.append((density, p))
     options.sort(key=lambda dp: -dp[0])
 

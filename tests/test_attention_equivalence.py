@@ -1,10 +1,13 @@
 """Property tests: every attention execution strategy computes the SAME
 function — chunked flash, hierarchical decomposition, banded local, and
 GQA with expanded KV all reduce to plain masked softmax attention."""
+import pytest
+
+pytest.importorskip("hypothesis")  # optional extra; suite stays green without it
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
-import pytest
 from hypothesis import given, settings
 
 from repro.models.lm.attention import gqa_attention

