@@ -1,0 +1,74 @@
+"""CI benchmark regression guard.
+
+Compares a fresh ``--json`` dump from ``benchmarks/run.py`` against the
+committed ``benchmarks/baseline.json`` and FAILS (exit 1) when any pinned
+metric regressed more than the threshold (default 30%).
+
+    python benchmarks/check_regression.py BENCH_ci.json \
+        benchmarks/baseline.json [--threshold 0.30]
+
+All pinned metrics are higher-is-better (throughput in rps, or unit-free
+speedup ratios).  The baseline deliberately pins mostly RATIOS
+(batched-vs-sequential, compiled-vs-interpreted): absolute wall-clock on
+shared CI runners swings far more than 30%, while the ratios cancel the
+host speed and catch real scheduling/lowering regressions.  Baseline
+values are themselves conservative floors below locally measured numbers
+(see ``note`` in the file), so the guard trips on structural regressions,
+not host jitter.  A metric missing from the fresh run also fails —
+silently dropping a benchmark must not pass the guard.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(current: dict, baseline: dict, threshold: float) -> list[str]:
+    failures = []
+    cur = current.get("metrics", {})
+    print(f"{'metric':56s} {'base':>10s} {'now':>10s} {'floor':>10s}  ok")
+    for name in sorted(baseline.get("metrics", {})):
+        base = baseline["metrics"][name]
+        floor = base * (1.0 - threshold)
+        have = cur.get(name)
+        if have is None:
+            print(f"{name:56s} {base:10.3f} {'MISSING':>10s} {floor:10.3f}  "
+                  f"FAIL")
+            failures.append(f"{name}: missing from current run")
+            continue
+        ok = have >= floor
+        print(f"{name:56s} {base:10.3f} {have:10.3f} {floor:10.3f}  "
+              f"{'ok' if ok else 'FAIL'}")
+        if not ok:
+            failures.append(f"{name}: {have:.3f} < floor {floor:.3f} "
+                            f"(baseline {base:.3f}, -{threshold:.0%})")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="fresh run.py --json output")
+    ap.add_argument("baseline", help="committed baseline.json")
+    ap.add_argument("--threshold", type=float, default=0.30,
+                    help="max tolerated relative regression (default 0.30)")
+    args = ap.parse_args(argv)
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = check(current, baseline, args.threshold)
+    if failures:
+        print(f"\nREGRESSION GUARD FAILED ({len(failures)}):",
+              file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    n = len(baseline.get("metrics", {}))
+    print(f"\nregression guard passed: {n} metrics within "
+          f"{args.threshold:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -6,13 +6,26 @@ Prints ``name,us_per_call,derived`` CSV rows:
   table1 module-family gains vs the paper's reported numbers   (paper Tab.I)
   beyond beyond-paper budgeted partitioner (all schemes)       (§Perf)
   hetero_exec interpreted vs compiled plan execution, batch 1/8/32
+  serve  batched multi-plan serving vs sequential baselines    (§Serving):
+         serve/<net>/seq_interpreted   per-request us through the oracle
+         serve/<net>/seq_compiled      per-request us, engine batch-1 loop
+         serve/<net>/batched_burst     us/req + rps;p50_ms;p99_ms;vs_seq;
+                                       vs_interp (closed-loop burst)
+         serve/<net>/load<m>x          offered-load point at m x batched
+                                       capacity: offered_rps;rps;p50;p99
+         serve/mixed/batched_burst     all plans resident, interleaved
   kernels wall-clock of the kernel reference paths on this host
   roofline per-cell dry-run roofline terms                     (§Roofline)
 
 ``python benchmarks/run.py [section ...]`` runs a subset (default: all).
+``--json PATH`` additionally dumps rows plus a flat ``metrics`` dict
+(every ``key=value`` float in ``derived``) — CI stores this as the
+``BENCH_ci.json`` artifact and guards it against ``baseline.json`` with
+``check_regression.py``.
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 
@@ -132,6 +145,143 @@ def hetero_exec_rows(batches=(1, 8, 32), res=96):
     return rows
 
 
+def _serve_setup(res):
+    from repro.core.executor import compile_network
+    from repro.core.graph import NETWORKS
+    from repro.core.hetero import init_network
+    from repro.core.partitioner import partition_network
+    nets = {}
+    for net, builder in NETWORKS.items():
+        mods = builder()
+        plans = partition_network(mods, paper_faithful=True)
+        params = init_network(mods, jax.random.PRNGKey(0))
+        eng = compile_network(mods, plans)
+        prep = eng.prepare(params)
+        jax.block_until_ready(eng(prep, jnp.zeros((1, res, res, 3))))
+        # per-network bucket policy: SqueezeNet is all fp32-GEMM compute and
+        # goes cache-bound past batch 8 on small hosts; the depthwise nets
+        # keep batching gains through 32
+        buckets = (1, 4, 8) if net == "squeezenet" else (1, 4, 8, 32)
+        nets[net] = dict(mods=mods, plans=plans, params=params, eng=eng,
+                         prep=prep, buckets=buckets)
+    return nets
+
+
+def _burst(server, reqs, timeout=300):
+    """Submit (net, img) pairs as fast as possible; returns (wall_s,
+    per-request latencies).  Latency is stamped by a done-callback (fires
+    in the drain thread at result time) — polling result() in submit order
+    would bill early finishers for the poll loop's position."""
+    t0 = time.perf_counter()
+    lats = []
+    subs = []
+    for net, x in reqs:
+        t_sub = time.perf_counter()
+        f = server.submit(net, x)
+        f.add_done_callback(
+            lambda _f, t=t_sub: lats.append(time.perf_counter() - t))
+        subs.append(f)
+    for f in subs:
+        f.result(timeout=timeout)
+    return time.perf_counter() - t0, lats
+
+
+def serve_rows(n_req=32, res=96):
+    """Batched async serving vs the sequential interpreted / compiled
+    baselines, plus an offered-load sweep (open loop, paced arrivals)."""
+    from repro.core.hetero import run_network
+    from repro.serving import HeteroServer, percentile
+    nets = _serve_setup(res)
+    rows = []
+    seq_total = 0.0
+    for net, d in nets.items():
+        imgs = [jax.random.normal(jax.random.PRNGKey(i), (res, res, 3))
+                for i in range(n_req)]
+        # sequential interpreted oracle (1 warm + 2 timed calls: it's slow)
+        t_i = _time(lambda: run_network(d["mods"], d["params"],
+                                        imgs[0][None], d["plans"]), reps=2)
+        # sequential compiled: engine batch-1 loop, one dispatch per request
+        t0 = time.perf_counter()
+        for x in imgs:
+            jax.block_until_ready(d["eng"](d["prep"], x[None]))
+        t_c = (time.perf_counter() - t0) / n_req * 1e6
+        seq_total += t_c
+        # batched burst through a server with this net's bucket policy
+        server = HeteroServer(buckets=d["buckets"], max_wait_ms=2.0)
+        server.register(net, d["mods"], d["plans"], d["params"],
+                        input_hw=(res, res), buckets=d["buckets"])
+        with server:
+            _burst(server, [(net, x) for x in imgs[:d["buckets"][-1]]])
+            wall, lats = _burst(server, [(net, x) for x in imgs])
+            wall2, lats2 = _burst(server, [(net, x) for x in imgs])
+            if wall2 < wall:
+                wall, lats = wall2, lats2
+        t_b = wall / n_req * 1e6
+        snap = server.metrics.snapshot()
+        rows.append((f"serve/{net}/seq_interpreted", t_i,
+                     f"rps={1e6 / t_i:.1f}"))
+        rows.append((f"serve/{net}/seq_compiled", t_c,
+                     f"rps={1e6 / t_c:.1f}"))
+        rows.append((f"serve/{net}/batched_burst", t_b,
+                     f"rps={1e6 / t_b:.1f};"
+                     f"p50_ms={percentile(lats, 50) * 1e3:.2f};"
+                     f"p99_ms={percentile(lats, 99) * 1e3:.2f};"
+                     f"batches={snap['batches']};"
+                     f"vs_seq={t_c / t_b:.2f}x;vs_interp={t_i / t_b:.2f}x"))
+        # offered-load sweep: open loop at 0.5x / 0.9x of burst capacity
+        cap_rps = 1e6 / t_b
+        for mult in (0.5, 0.9):
+            interval = 1.0 / (cap_rps * mult)
+            server = HeteroServer(buckets=d["buckets"], max_wait_ms=2.0)
+            server.register(net, d["mods"], d["plans"], d["params"],
+                            input_hw=(res, res), buckets=d["buckets"])
+            with server:
+                t0 = time.perf_counter()
+                subs = []
+                lats = []
+                for i, x in enumerate(imgs):
+                    target = t0 + i * interval
+                    while time.perf_counter() < target:
+                        time.sleep(0)
+                    t_sub = time.perf_counter()
+                    f = server.submit(net, x)
+                    f.add_done_callback(
+                        lambda _f, t=t_sub:
+                        lats.append(time.perf_counter() - t))
+                    subs.append(f)
+                for f in subs:
+                    f.result(timeout=300)
+                wall = time.perf_counter() - t0
+            rows.append((f"serve/{net}/load{mult}x", wall / n_req * 1e6,
+                         f"offered_rps={cap_rps * mult:.1f};"
+                         f"rps={n_req / wall:.1f};"
+                         f"p50_ms={percentile(lats, 50) * 1e3:.2f};"
+                         f"p99_ms={percentile(lats, 99) * 1e3:.2f}"))
+    # mixed multi-plan: every network resident, interleaved burst
+    server = HeteroServer(buckets=(1, 4, 8, 32), max_wait_ms=2.0)
+    for net, d in nets.items():
+        server.register(net, d["mods"], d["plans"], d["params"],
+                        input_hw=(res, res), buckets=d["buckets"])
+    per_net = max(1, n_req // len(nets))
+    reqs = [(net, jax.random.normal(jax.random.PRNGKey(100 + i),
+                                    (res, res, 3)))
+            for i in range(per_net) for net in nets]
+    with server:
+        _burst(server, reqs[:8])
+        wall, lats = _burst(server, reqs)
+        wall2, lats2 = _burst(server, reqs)
+        if wall2 < wall:
+            wall, lats = wall2, lats2
+    t_mix = wall / len(reqs) * 1e6
+    t_seq_mix = seq_total / len(nets)     # mean sequential-compiled us/req
+    rows.append(("serve/mixed/batched_burst", t_mix,
+                 f"rps={1e6 / t_mix:.1f};"
+                 f"p50_ms={percentile(lats, 50) * 1e3:.2f};"
+                 f"p99_ms={percentile(lats, 99) * 1e3:.2f};"
+                 f"vs_seq={t_seq_mix / t_mix:.2f}x"))
+    return rows
+
+
 def kernel_bench():
     from repro.kernels.flash_attention.ref import attention
     from repro.kernels.fused_block.ref import fused_dw_pw
@@ -197,21 +347,56 @@ SECTIONS = {
     "beyond": beyond_paper,
     "tpu_map": tpu_map_rows,
     "hetero_exec": hetero_exec_rows,
+    "serve": serve_rows,
     "kernels": kernel_bench,
     "roofline": roofline_rows,
 }
 
 
+def metrics_from_rows(rows) -> dict:
+    """Flatten every ``key=value`` float in ``derived`` (trailing 'x'
+    stripped) into {"<row>/<key>": value} — the regression-guard input."""
+    out = {}
+    for name, _us, derived in rows:
+        for part in str(derived).split(";"):
+            if "=" not in part:
+                continue
+            k, v = part.split("=", 1)
+            try:
+                out[f"{name}/{k}"] = float(v.rstrip("x"))
+            except ValueError:
+                continue
+    return out
+
+
 def main(argv: list[str] | None = None) -> None:
-    names = (argv if argv else sys.argv[1:]) or list(SECTIONS)
+    args = list(argv if argv is not None else sys.argv[1:])
+    json_path = None
+    if "--json" in args:
+        i = args.index("--json")
+        json_path = args[i + 1]
+        del args[i:i + 2]
+    names = args or list(SECTIONS)
     unknown = [n for n in names if n not in SECTIONS]
     if unknown:
         raise SystemExit(f"unknown section(s) {unknown}; "
                          f"choose from {list(SECTIONS)}")
     print("name,us_per_call,derived")
+    all_rows = []
     for n in names:
         for name, us, derived in SECTIONS[n]():
             print(f"{name},{us:.1f},{derived}")
+            all_rows.append((name, us, derived))
+    if json_path:
+        payload = {
+            "rows": [{"name": n, "us_per_call": us, "derived": d}
+                     for n, us, d in all_rows],
+            "metrics": metrics_from_rows(all_rows),
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"# wrote {json_path} ({len(payload['metrics'])} metrics)",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -3,6 +3,9 @@ inspect the chosen schemes, and run the partitioned network in JAX — first
 through the interpreted reference, then through the compiled engine.
 
     PYTHONPATH=src python examples/quickstart.py [--net mobilenetv2]
+
+For the serving layer on top of the engine (dynamic batching, multi-plan
+residency, async dispatch), see ``examples/serving_quickstart.py``.
 """
 import argparse
 import time

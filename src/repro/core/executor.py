@@ -38,9 +38,11 @@ parity-tested against (``tests/test_executor.py``).
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import astuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.graph import ModuleGraph
 from repro.core.lowering import lower_network
@@ -71,15 +73,27 @@ def plan_signature(mods: list[ModuleGraph], plans: list[Plan] | None,
 
 class CompiledNetwork:
     """A (modules, plans) pair lowered and jitted once.  Call ``prepare``
-    once per parameter tree, then treat the instance as the forward fn."""
+    once per parameter tree, then treat the instance as the forward fn.
+
+    ``jax.jit`` still traces once per distinct input SHAPE — a serving
+    layer that pads requests into bucket-sized batches should ``warmup``
+    each bucket shape ahead of traffic so no live request ever pays a
+    trace.  ``exec_stats`` surfaces that accounting (one "trace" per new
+    shape, everything after is a cache hit inside jit)."""
 
     def __init__(self, mods: list[ModuleGraph], plans: list[Plan] | None,
                  use_pallas: bool):
         self.signature = plan_signature(mods, plans, use_pallas)
         self.use_pallas = use_pallas
+        self.generation = _GENERATION[0]
         prepare_fn, run = lower_network(mods, plans, use_pallas)
         self._prepare_jit = jax.jit(prepare_fn)
         self._jitted = jax.jit(run)
+        self._shapes_seen: set = set()
+        self._exec = {"calls": 0, "traces": 0}
+        # cached engines are shared across threads (serving drain loop +
+        # direct callers); keep the accounting race-free
+        self._stats_lock = threading.Lock()
 
     def prepare(self, params) -> dict:
         """One-time parameter lowering: FPGA weights quantized here (int8
@@ -87,11 +101,35 @@ class CompiledNetwork:
         return self._prepare_jit(params)
 
     def __call__(self, prepared, x):
+        key = (tuple(x.shape), str(getattr(x, "dtype", "f32")))
+        with self._stats_lock:
+            if key not in self._shapes_seen:
+                self._shapes_seen.add(key)
+                self._exec["traces"] += 1
+            self._exec["calls"] += 1
         return self._jitted(prepared, x)
+
+    def warmup(self, prepared, shapes) -> dict:
+        """Trace/compile each input shape once on zeros (per-bucket compile
+        warm-up for the serving path).  Returns ``exec_stats()``."""
+        for s in shapes:
+            jax.block_until_ready(self(prepared, jnp.zeros(s, jnp.float32)))
+        return self.exec_stats()
+
+    def exec_stats(self) -> dict:
+        with self._stats_lock:
+            return dict(self._exec)
+
+    def is_current(self) -> bool:
+        """False once ``clear_cache`` ran after this engine was built —
+        a serving layer holding the instance should re-``compile_network``
+        (the engine itself keeps working; this only flags staleness)."""
+        return self.generation == _GENERATION[0]
 
 
 _CACHE: dict[tuple, CompiledNetwork] = {}
 _STATS = {"hits": 0, "misses": 0}
+_GENERATION = [0]       # bumped by clear_cache; engines stamp it at build
 
 
 def compile_network(mods: list[ModuleGraph], plans: list[Plan] | None = None,
@@ -113,9 +151,12 @@ def compile_network(mods: list[ModuleGraph], plans: list[Plan] | None = None,
 
 
 def cache_stats() -> dict:
-    return {"size": len(_CACHE), **_STATS}
+    return {"size": len(_CACHE), "generation": _GENERATION[0], **_STATS}
 
 
 def clear_cache() -> None:
+    """Drop all cached engines and invalidate live ones (their
+    ``is_current`` flips false; holders decide when to recompile)."""
     _CACHE.clear()
     _STATS.update(hits=0, misses=0)
+    _GENERATION[0] += 1

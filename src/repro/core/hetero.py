@@ -2,8 +2,9 @@
 
 Runs a ModuleGraph in JAX with substrate routing, node by node in Python:
 "gpu" nodes compute in fp32/bf16; "fpga" nodes go through the paper's 8-bit
-fixed-point path (per-channel weight + per-tensor activation quantization,
-via repro.quant).  GConv splits execute both channel slices and sum partials
+fixed-point path (per-channel weight + per-sample activation quantization,
+via repro.quant — per-sample so a request's numerics are independent of its
+batch-mates, the contract ``repro.serving`` batching relies on).  GConv splits execute both channel slices and sum partials
 — so every Plan is runnable and testable against the monolithic fp32
 network, not just priced.
 
@@ -69,7 +70,9 @@ def _run_conv(n: Node, p, x, quantized: bool):
     spec = n.spec
     w = p["w"]
     if quantized:                       # the FPGA's 8-bit fixed point
-        x = fake_quant(x)
+        # per-sample activation scales (axis=0), matching the compiled
+        # engine: a request's numerics never depend on its batch-mates
+        x = fake_quant(x, axis=0)
         w = fake_quant(w, axis=-1)
     if spec.kind == "fc":
         y = x.reshape(x.shape[0], -1) @ w + p["b"]

@@ -16,24 +16,40 @@ Lowering rules, in priority order per node:
      maps inside the FPGA fabric.  Weights are fake-quantized at prepare
      time (per-out-channel int8 grid); the activation entering the chain is
      fake-quantized at run time.
-  2. **True-int8 FPGA GEMM**: FPGA-assigned ``pwconv`` (k=1, s=1, groups=1)
-     and ``fc`` nodes lower to ``int8_gemm`` — weights are quantized ONCE at
-     prepare time and kept resident as int8 (+ per-channel scale); only the
-     per-tensor activation quantization remains in the hot path.  This
-     replaces the interpreter's per-call ``fake_quant`` round trip.
+  2. **True-int8 FPGA GEMM**: every FPGA-assigned groups==1 conv (any k,
+     via im2col) and ``fc`` node lowers to ``int8_gemm`` — weights are
+     quantized ONCE at prepare time and kept resident as int8 (+
+     per-channel scale); only the per-sample activation quantization
+     remains in the hot path.  This replaces the interpreter's per-call
+     ``fake_quant`` round trip, and the order-exact int32 accumulation
+     makes the heavy FPGA layers batch-invariant with no row tiling.
   3. **GConv split** (paper Fig. 2b): a node with a ``gconv`` fraction lowers
      to a SINGLE concatenated conv — the FPGA slice's input channels and
      weights are fake-quantized (weights at prepare time), concatenated with
      the fp32 GPU slice, and convolved in one ``conv_general_dilated`` call
      (convolution is linear in input channels, so this equals the summed
      partials).
-  4. **Quantized FPGA conv**: any other FPGA-assigned conv keeps the XLA
-     conv but with weights fake-quantized at prepare time.
+  4. **Quantized FPGA conv**: remaining FPGA-assigned convs (depthwise /
+     grouped) keep the shift-add / XLA conv path with weights
+     fake-quantized at prepare time.
   5. **GPU nodes** keep the fp32 XLA path unchanged.
 
 ``use_pallas=False`` swaps rules 1-2 onto their pure-XLA reference kernels
 (the right choice on CPU, where Pallas runs in interpret mode); the lowered
 program and prepared parameters are identical either way.
+
+**Batch invariance** (the serving contract): every run-time step is
+row-independent in the batch dimension, so row ``i`` of a batched call is
+bit-identical to the same image run alone.  Three rules enforce this:
+activation quantization is per-sample (``axis=0`` — scales never couple
+requests sharing a batch); the int8 GEMM accumulates order-exactly (int32
+on TPU, exact-below-2^24 fp32 on CPU), so the heavy FPGA layers are
+invariant for free; and the remaining fp32 GEMMs — including every
+groups==1 conv, lowered via im2col — run in fixed row tiles
+(``_rowsafe_matmul``) because XLA:CPU picks gemm blocking from the full
+operand shapes and different blockings round differently.  ``repro.serving``
+relies on this to pad requests into bucket-sized batches without
+perturbing anyone's logits; ``tests/test_serving.py`` holds the line.
 """
 from __future__ import annotations
 
@@ -55,6 +71,31 @@ from repro.quant import fake_quant, quantize
 # node-level step builders: each returns (prepare(params_node) -> prepared,
 #                                         run(prepared, x) -> y)
 # --------------------------------------------------------------------------
+
+_ROW_TILE = 8
+
+
+def _rowsafe_matmul(a, w, tile: int = _ROW_TILE):
+    """a (M,K) @ w (K,N) computed in fixed (tile,K)@(K,N) row blocks.
+
+    XLA:CPU picks gemm strategy (threading, cache blocking, small-M
+    kernels) from the FULL operand shapes, and different K-panel groupings
+    round differently — so row i of an (M,K) gemm is NOT bit-stable across
+    M.  Padding M to a tile multiple and mapping the same fixed-shape gemm
+    over row blocks pins the strategy, making every row's accumulation
+    chain a function of that row alone.  This is what lets ``repro.serving``
+    promise batch-size-independent logits.  Zero pad rows never enter a
+    real row's chain; ``tile`` trades scan overhead (small tile, small M)
+    against lost inter-block threading (large tile, large M)."""
+    M, K = a.shape
+    mp = -(-M // tile) * tile
+    ap = jnp.pad(a, ((0, mp - M), (0, 0)))
+    if mp == tile:
+        return (ap @ w)[:M]
+    _, out = jax.lax.scan(lambda c, t: (c, t @ w), None,
+                          ap.reshape(-1, tile, K), unroll=4)
+    return out.reshape(mp, -1)[:M]
+
 
 def _same_taps(x, k: int, s: int, fill=0.0):
     """SAME-pad x (NHWC) for a k*k/stride-s window (XLA's lo=total//2 split)
@@ -91,38 +132,58 @@ def _xla_conv(spec: ConvSpec, act: str):
             return apply_act(y + p["b"], act)
         return run
     groups = spec.c_in if spec.kind == "dwconv" else spec.groups
+    if groups == 1:
+        # im2col + fixed-tile GEMM rather than conv_general_dilated: the
+        # row-tiled GEMM is batch-invariant (see _rowsafe_matmul) where
+        # XLA:CPU's conv — itself a gemm over B*Ho*Wo rows — is not, and
+        # for the small late-stage maps it also dodges conv's fixed per-op
+        # cost.  The tile is a function of the spatial size only, so every
+        # batch size lowers to the same per-block gemm shape.
+        def run(p, x):
+            y = _conv_im2col(x, p["w"], spec.k, spec.stride)
+            return apply_act(y + p["b"], act)
+        return run
 
     def run(p, x):
-        ho = -(-x.shape[1] // spec.stride)
-        wo = -(-x.shape[2] // spec.stride)
-        if groups == 1 and ho * wo <= 16:
-            # late-stage maps are a few pixels with many channels; XLA:CPU
-            # conv has a fixed per-op cost that dwarfs them — one im2col
-            # GEMM is several times cheaper (and exact)
-            y = _conv_im2col(x, p["w"], spec.k, spec.stride)
-        else:
-            y = jax.lax.conv_general_dilated(
-                x, p["w"], window_strides=(spec.stride, spec.stride),
-                padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"),
-                feature_group_count=groups)
+        # grouped-conv fallback; unused by the paper networks (their only
+        # grouped convs are depthwise, handled by the shift-add path) and
+        # NOT batch-invariant — keep new graphs off this path if they are
+        # to be served batched
+        y = jax.lax.conv_general_dilated(
+            x, p["w"], window_strides=(spec.stride, spec.stride),
+            padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=groups)
         return apply_act(y + p["b"], act)
     return run
 
 
+def _spatial_tile(hw: int) -> int:
+    """Row tile for a fp32 (B*Ho*Wo, K) GEMM: one sample's rows per tile,
+    so batch 1 pays no padding and every batch size sees the same block
+    shape.  Depends on the spatial size only — never on batch.  (The heavy
+    FPGA layers take the int8 GEMM path instead, which is order-exact and
+    needs no tiling; fp32 tiles only carry the cheap GPU-side glue.)"""
+    return -(-hw // _ROW_TILE) * _ROW_TILE
+
+
 def _conv_im2col(x, w, k: int, s: int):
-    """SAME conv as a single (B*Ho*Wo, k*k*C) @ (k*k*C, Co) GEMM."""
+    """SAME conv as a row-tiled (B*Ho*Wo, k*k*C) @ (k*k*C, Co) GEMM."""
     C, co = x.shape[-1], w.shape[-1]
-    cols = jnp.concatenate([sl for _dy, _dx, sl in _same_taps(x, k, s)],
-                           axis=-1)
-    y = cols.reshape(-1, k * k * C) @ w.reshape(-1, co)
+    if k == 1 and s == 1:
+        cols = x
+    else:
+        cols = jnp.concatenate([sl for _dy, _dx, sl in _same_taps(x, k, s)],
+                               axis=-1)
+    y = _rowsafe_matmul(cols.reshape(-1, k * k * C), w.reshape(-1, co),
+                        tile=_spatial_tile(cols.shape[1] * cols.shape[2]))
     return y.reshape(*cols.shape[:3], co)
 
 
 def _lower_gpu(n: Node):
     if n.spec.kind == "fc":
         def run(p, x):
-            return apply_act(x.reshape(x.shape[0], -1) @ p["w"] + p["b"],
-                             n.act)
+            y = _rowsafe_matmul(x.reshape(x.shape[0], -1), p["w"])
+            return apply_act(y + p["b"], n.act)
     else:
         run = _xla_conv(n.spec, n.act)
     return (lambda p: {"w": p["w"], "b": p["b"]}), run
@@ -130,35 +191,51 @@ def _lower_gpu(n: Node):
 
 def _lower_fpga_fq(n: Node):
     """FPGA conv that cannot use the int8 GEMM: weights fake-quantized once
-    at prepare time, activation fake-quantized per call, XLA conv."""
+    at prepare time, activation fake-quantized per call (per-sample scales:
+    batching must not change any request's numerics), XLA conv."""
     conv = _xla_conv(n.spec, n.act)
 
     def prepare(p):
         return {"w": fake_quant(p["w"], axis=-1), "b": p["b"]}
 
     def run(p, x):
-        return conv(p, fake_quant(x))
+        return conv(p, fake_quant(x, axis=0))
     return prepare, run
 
 
 def _lower_fpga_int8(n: Node, use_pallas: bool):
-    """True-int8 path: pwconv/fc as an int8 GEMM with resident int8 weights."""
+    """True-int8 path: any groups==1 FPGA conv (via im2col) or fc as an
+    int8 GEMM with resident int8 weights.  The int32 accumulation is
+    order-exact, so this path is batch-invariant with full cross-sample
+    vectorization — no row tiling needed — and it is the faithful DHM
+    substrate: the FPGA computes in 8-bit fixed point end to end."""
     spec = n.spec
 
     def prepare(p):
-        w2d = p["w"].reshape(-1, spec.c_out)
+        w2d = p["w"].reshape(-1, spec.c_out)   # (k*k*C, co) for convs
         w_q, w_s = quantize(w2d, axis=-1)
         return {"w_q": w_q, "w_s": w_s.reshape(-1), "b": p["b"]}
 
     def run(p, x):
-        lead = x.shape[0] if spec.kind == "fc" else x.shape[:-1]
-        xm = x.reshape(x.shape[0], -1) if spec.kind == "fc" \
-            else x.reshape(-1, x.shape[-1])
-        x_q, x_s = quantize(xm)
-        y = int8_gemm(x_q, p["w_q"], x_s, p["w_s"], use_pallas=use_pallas)
-        y = y + p["b"]
-        if spec.kind != "fc":
-            y = y.reshape(*lead, spec.c_out)
+        # per-sample activation scales (axis=0): each request in a served
+        # batch quantizes exactly as it would alone
+        x_q4, x_s4 = quantize(x, axis=0)
+        if spec.kind == "fc":
+            y = int8_gemm(x_q4.reshape(x.shape[0], -1), p["w_q"],
+                          x_s4.reshape(x.shape[0], 1), p["w_s"],
+                          use_pallas=use_pallas)
+            return apply_act(y + p["b"], n.act)
+        if spec.k == 1 and spec.stride == 1:
+            cols = x_q4
+        else:
+            cols = jnp.concatenate(
+                [sl for _dy, _dx, sl in
+                 _same_taps(x_q4, spec.k, spec.stride, fill=0)], axis=-1)
+        lead = cols.shape[:3]
+        x_s = jnp.broadcast_to(x_s4, (*lead, 1)).reshape(-1, 1)
+        y = int8_gemm(cols.reshape(-1, cols.shape[-1]), p["w_q"], x_s,
+                      p["w_s"], use_pallas=use_pallas)
+        y = (y + p["b"]).reshape(*lead, spec.c_out)
         return apply_act(y, n.act)
     return prepare, run
 
@@ -175,16 +252,18 @@ def _lower_fused_pair(dw: Node, pw: Node, use_pallas: bool):
 
     if use_pallas:
         def run(p, x):
-            y = fused_block(fake_quant(x), p["dw_w"], p["dw_b"],
+            y = fused_block(fake_quant(x, axis=0), p["dw_w"], p["dw_b"],
                             p["pw_w"], p["pw_b"], use_pallas=True)
             return apply_act(y, pw.act)
     else:
         def run(p, x):
             # same fused dataflow in plain XLA: shift-add dw, relu6, one GEMM
-            x = fake_quant(x)
+            x = fake_quant(x, axis=0)
             h = jnp.clip(_dw_shift_add(p["dw_w"], x, 3, 1) + p["dw_b"],
                          0.0, 6.0)
-            y = h.reshape(-1, h.shape[-1]) @ p["pw_w"] + p["pw_b"]
+            y = _rowsafe_matmul(h.reshape(-1, h.shape[-1]), p["pw_w"],
+                                tile=_spatial_tile(h.shape[1] * h.shape[2]))
+            y = y + p["pw_b"]
             return apply_act(y.reshape(*h.shape[:-1], pw.spec.c_out), pw.act)
     return prepare, run
 
@@ -205,7 +284,8 @@ def _lower_gconv(n: Node, frac: float):
         return {"w": w_cat, "b": p["b"]}
 
     def run(p, x):
-        x_cat = jnp.concatenate([fake_quant(x[..., :g]), x[..., g:]], axis=-1)
+        x_cat = jnp.concatenate([fake_quant(x[..., :g], axis=0), x[..., g:]],
+                                axis=-1)
         return conv(p, x_cat)
     return prepare, run
 
@@ -303,9 +383,9 @@ def lower_module(m: ModuleGraph, plan: Plan | None, use_pallas: bool):
                 continue
             if n.name in gconv:
                 prep, run = _lower_gconv(n, gconv[n.name])
-            elif fpga and ((n.spec.kind == "pwconv" and n.spec.k == 1
-                            and n.spec.stride == 1 and n.spec.groups == 1)
-                           or n.spec.kind == "fc"):
+            elif fpga and (n.spec.kind == "fc"
+                           or (n.spec.kind in ("conv", "pwconv")
+                               and n.spec.groups == 1)):
                 prep, run = _lower_fpga_int8(n, use_pallas)
             elif fpga:
                 prep, run = _lower_fpga_fq(n)

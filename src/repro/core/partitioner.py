@@ -241,9 +241,14 @@ def partition_network(modules: list[ModuleGraph], objective: str = "paper",
                 continue
             if objective == "paper" and not admissible(p, latency_slack):
                 continue
-            if objective == "latency" and p.cost.latency >= p.gpu_only.latency:
-                continue
-            if objective == "edp":
+            if objective == "latency":
+                # rank by latency saved per resident resource (was: energy
+                # saving, which let an energy-dense but latency-neutral
+                # plan crowd out the actual latency wins)
+                saving = p.gpu_only.latency - p.cost.latency
+                if saving <= 0:
+                    continue
+            elif objective == "edp":
                 # energy-delay product: only admit plans that strictly
                 # improve EDP, and rank by EDP saved per resident resource
                 saving = _edp(p.gpu_only) - _edp(p.cost)

@@ -17,11 +17,15 @@ def _kernel(x_ref, w_ref, xs_ref, ws_ref, out_ref):
         x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.int32)
     out_ref[...] = (acc.astype(jnp.float32)
-                    * xs_ref[0] * ws_ref[...][None, :])
+                    * xs_ref[...][:, None] * ws_ref[...][None, :])
 
 
 def int8_gemm_pallas(x_q, w_q, x_scale, w_scale, *, tm=256, tn=256,
                      interpret=False):
+    """``x_scale`` may be a scalar (per-tensor) or an (M,)/(M,1) per-row
+    vector — the serving path quantizes activations per request so batching
+    cannot change any request's numerics; each row tile carries its own
+    scale slice, mirroring the per-channel ``w_scale`` tile."""
     M, K = x_q.shape
     N = w_q.shape[1]
     tm = min(tm, M)
@@ -29,14 +33,15 @@ def int8_gemm_pallas(x_q, w_q, x_scale, w_scale, *, tm=256, tn=256,
     assert M % tm == 0 and N % tn == 0, (M, N, tm, tn)
     ws = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32).reshape(-1),
                           (N,))
-    xs = jnp.asarray(x_scale, jnp.float32).reshape(1)
+    xs = jnp.broadcast_to(jnp.asarray(x_scale, jnp.float32).reshape(-1, 1),
+                          (M, 1)).reshape(-1)
     return pl.pallas_call(
         _kernel,
         grid=(M // tm, N // tn),
         in_specs=[
             pl.BlockSpec((tm, K), lambda i, j: (i, 0)),
             pl.BlockSpec((K, tn), lambda i, j: (0, j)),
-            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((tm,), lambda i, j: (i,)),
             pl.BlockSpec((tn,), lambda i, j: (j,)),
         ],
         out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),

@@ -23,13 +23,17 @@ def int8_gemm(x_q, w_q, x_scale, w_scale, use_pallas: bool = True,
               tm: int = 256, tn: int = 256):
     """x_q (M,K) int8 @ w_q (K,N) int8 -> (M,N) f32 requantized.
 
+    ``x_scale`` is a scalar (per-tensor) or an (M,)/(M,1) per-row vector —
+    per-request scales keep batched serving numerics identical to batch-1.
     The Pallas kernel requires M/N to be tile multiples; arbitrary shapes
     are zero-padded up to the tile grid here and the result sliced back.
     """
-    if not use_pallas:
-        return int8_gemm_ref(x_q, w_q, x_scale,
-                             jnp.asarray(w_scale).reshape(1, -1))
     M = x_q.shape[0]
+    xs = jnp.asarray(x_scale, jnp.float32)
+    xs = xs.reshape(()) if xs.size == 1 else xs.reshape(-1, 1)
+    if not use_pallas:
+        return int8_gemm_ref(x_q, w_q, xs,
+                             jnp.asarray(w_scale).reshape(1, -1))
     N = w_q.shape[1]
     tm = min(tm, M)
     tn = min(tn, N)
@@ -38,7 +42,9 @@ def int8_gemm(x_q, w_q, x_scale, w_scale, use_pallas: bool = True,
     wp = jnp.pad(w_q, ((0, 0), (0, np_ - N)))
     ws = jnp.pad(jnp.asarray(w_scale, jnp.float32).reshape(-1),
                  (0, np_ - N))
-    out = int8_gemm_pallas(xp, wp, x_scale, ws, tm=tm, tn=tn,
+    xs_rows = jnp.pad(jnp.broadcast_to(xs.reshape(-1, 1), (M, 1)),
+                      ((0, mp - M), (0, 0)))
+    out = int8_gemm_pallas(xp, wp, xs_rows, ws, tm=tm, tn=tn,
                            interpret=jax.default_backend() == "cpu")
     return out[:M, :N]
 

@@ -1,10 +1,34 @@
-"""Oracle: int8 x int8 -> int32 -> f32 requantized GEMM."""
+"""Oracle: int8 x int8 -> int32 -> f32 requantized GEMM.
+
+The CPU fast path runs the integer GEMM **in fp32**: int8 products are
+integers <= 127*127, so every partial sum of a K-chunk stays an exactly
+representable integer below 2^24 and no add ever rounds — the fp32 gemm is
+bit-identical to the int32 accumulate for ANY summation order or blocking
+(hence batch-invariant, which ``repro.serving`` relies on) while hitting
+the platform's optimized fp32 kernels instead of XLA:CPU's scalar s8 dot.
+K is split into <=1024-wide chunks whose exact fp32 partials are combined
+in int32, extending exactness to arbitrary K.
+"""
 import jax
 import jax.numpy as jnp
 
+# 1024 * 127 * 127 = 16.5M < 2^24: any partial sum within a chunk is exact
+_K_CHUNK = 1024
+
 
 def int8_gemm(x_q, w_q, x_scale, w_scale):
-    """x_q (M,K) int8; w_q (K,N) int8; scales f32 (scalar / (1,N))."""
-    acc = jax.lax.dot_general(x_q, w_q, (((1,), (0,)), ((), ())),
-                              preferred_element_type=jnp.int32)
-    return acc.astype(jnp.float32) * x_scale * jnp.asarray(w_scale).reshape(1, -1)
+    """x_q (M,K) int8; w_q (K,N) int8; x_scale f32 scalar or per-row
+    (M,1); w_scale scalar or per-channel (1,N)."""
+    K = x_q.shape[1]
+    xf = x_q.astype(jnp.float32)
+    wf = w_q.astype(jnp.float32)
+    if K <= _K_CHUNK:
+        acc = xf @ wf                       # exact: all partials < 2^24
+    else:
+        tot = None
+        for k0 in range(0, K, _K_CHUNK):
+            part = (xf[:, k0:k0 + _K_CHUNK]
+                    @ wf[k0:k0 + _K_CHUNK]).astype(jnp.int32)
+            tot = part if tot is None else tot + part
+        acc = tot.astype(jnp.float32)
+    return acc * x_scale * jnp.asarray(w_scale).reshape(1, -1)

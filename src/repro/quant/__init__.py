@@ -1,8 +1,10 @@
 """8-bit fixed-point quantization — the paper's FPGA number format [2].
 
-Symmetric int8: per-channel scales for weights, per-tensor for activations.
-Used by (a) the hetero executor's FPGA substrate (DHM computes in int8),
-(b) the int8 Pallas GEMM kernel, and (c) the optional int8 serving path.
+Symmetric int8: per-channel scales for weights (``axis=-1``), per-sample
+scales for activations (``axis=0`` — one scale per batch row, so batched
+serving never couples requests), per-tensor when ``axis=None``.  Used by
+(a) the hetero executor's FPGA substrate (DHM computes in int8), (b) the
+int8 Pallas GEMM kernel, and (c) the batched serving path.
 """
 from __future__ import annotations
 

@@ -1,0 +1,14 @@
+"""Batched multi-plan serving on the compiled heterogeneous engine.
+
+``HeteroServer`` turns the jit-once engine (``repro.core.executor``) into a
+serving system: dynamic batching into padded, pre-warmed bucket shapes,
+several networks' plans resident at once, async submit/future dispatch, and
+p50/p99/throughput metrics.  See ``server.py`` for the guarantees.
+"""
+from repro.serving.batcher import (DEFAULT_BUCKETS, DynamicBatcher, Request,
+                                   pad_batch, pick_bucket)
+from repro.serving.metrics import ServerMetrics, percentile
+from repro.serving.server import HeteroServer
+
+__all__ = ["DEFAULT_BUCKETS", "DynamicBatcher", "HeteroServer", "Request",
+           "ServerMetrics", "pad_batch", "percentile", "pick_bucket"]

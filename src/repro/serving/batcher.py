@@ -1,0 +1,134 @@
+"""Dynamic request batching: padded buckets + deadline flush.
+
+Requests are single images; the batcher groups them per network and
+releases a batch when either (a) enough requests are queued to fill the
+largest bucket, or (b) the oldest request has waited ``max_wait_s``.  The
+released group is padded up to the smallest bucket that holds it, so every
+flush hits one of a handful of pre-warmed jit traces instead of compiling a
+fresh batch shape per group size.
+
+Bit-exactness contract: the compiled engine is batch-invariant (see
+``repro.core.lowering``), so neither the bucket choice, the zero padding,
+nor a request's batch-mates can change its logits.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+
+import numpy as np
+
+DEFAULT_BUCKETS = (1, 4, 8, 32)
+
+
+@dataclass
+class Request:
+    network: str
+    x: object                              # (H, W, C) array
+    future: Future = field(default_factory=Future)
+    t_enqueue: float = field(default_factory=time.monotonic)
+
+
+def pick_bucket(n: int, buckets) -> int:
+    """Smallest bucket >= n (buckets must be sorted ascending; n is capped
+    at the largest bucket by the flush logic)."""
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+def pad_batch(xs, bucket: int):
+    """Stack (H,W,C) images into a (bucket,H,W,C) batch, zero-padding the
+    tail slots.  Host-side numpy on purpose: a ``jnp.stack`` here would
+    jit-compile one concatenate per (bucket, image-count) pair and bill the
+    first live request for it.  Zero rows never affect real rows (batch
+    invariance)."""
+    xb = np.zeros((bucket, *np.shape(xs[0])), np.float32)
+    for i, x in enumerate(xs):
+        xb[i] = np.asarray(x)
+    return xb
+
+
+class DynamicBatcher:
+    """Per-network FIFO queues with a shared condition variable.
+
+    ``put`` enqueues and wakes the drain loop; ``wait_ready`` blocks until
+    some network has a flushable group (full bucket or deadline hit) and
+    pops it.  Multi-plan isolation is structural: groups never mix
+    networks, so each flush goes to exactly one compiled engine.
+    """
+
+    def __init__(self, max_wait_s: float = 0.002,
+                 max_batch: int = DEFAULT_BUCKETS[-1]):
+        self.max_wait_s = max_wait_s
+        self.max_batch = max_batch
+        self._queues: dict[str, deque] = {}
+        self._cond = threading.Condition()
+
+    def put(self, req: Request) -> None:
+        with self._cond:
+            self._queues.setdefault(req.network, deque()).append(req)
+            self._cond.notify()
+
+    def pending(self) -> int:
+        with self._cond:
+            return sum(len(q) for q in self._queues.values())
+
+    def _next_deadline_in(self, now: float) -> float | None:
+        ages = [now - q[0].t_enqueue for q in self._queues.values() if q]
+        if not ages:
+            return None
+        return max(0.0, self.max_wait_s - max(ages))
+
+    @staticmethod
+    def _deadline_take(n: int, ladder) -> int:
+        """How many of n overdue requests to flush given a bucket ladder.
+        Padding n up to its covering bucket is cheap when the waste is
+        small; when more than half the covering bucket would be pad (e.g.
+        10 requests into a 32-bucket), flush the largest full bucket
+        instead and leave the remainder queued for the next group."""
+        cover = pick_bucket(n, ladder)
+        if cover - n <= cover // 2:
+            return n
+        full = [b for b in ladder if b <= n]
+        return full[-1] if full else n
+
+    def wait_ready(self, timeout: float | None = None,
+                   buckets_by: dict | None = None):
+        """Block until a group is flushable; returns (network, requests,
+        by_deadline) or None on timeout.  ``buckets_by`` maps network ->
+        bucket ladder override (per-network bucket policy)."""
+        t_end = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while True:
+                now = time.monotonic()
+                for name, q in list(self._queues.items()):
+                    ladder = ((buckets_by or {}).get(name)
+                              or (self.max_batch,))
+                    limit = min(self.max_batch, ladder[-1])
+                    if len(q) >= limit:
+                        return (name,
+                                [q.popleft() for _ in range(limit)], False)
+                    if q and now - q[0].t_enqueue >= self.max_wait_s:
+                        take = self._deadline_take(min(len(q), limit),
+                                                   ladder)
+                        return name, [q.popleft() for _ in range(take)], True
+                wait = self._next_deadline_in(now)
+                if t_end is not None:
+                    rem = t_end - now
+                    if rem <= 0:
+                        return None
+                    wait = rem if wait is None else min(wait, rem)
+                self._cond.wait(wait)
+
+    def drain_all(self):
+        """Pop every queued request (shutdown path), grouped per network."""
+        with self._cond:
+            out = [(name, list(q)) for name, q in self._queues.items() if q]
+            for _name, _q in out:
+                self._queues[_name].clear()
+            return out

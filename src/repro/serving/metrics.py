@@ -1,0 +1,91 @@
+"""Serving metrics: counters + latency percentiles + throughput.
+
+One ``ServerMetrics`` per ``HeteroServer``; the drain loop records a sample
+per completed request (end-to-end: enqueue -> result ready) and a sample
+per flushed batch.  ``snapshot`` is safe to call from any thread.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+
+
+def percentile(values, q: float) -> float:
+    """Linear-interpolation percentile (q in [0, 100]) of an iterable."""
+    vs = sorted(values)
+    if not vs:
+        return float("nan")
+    if len(vs) == 1:
+        return float(vs[0])
+    pos = (len(vs) - 1) * q / 100.0
+    lo = int(pos)
+    hi = min(lo + 1, len(vs) - 1)
+    frac = pos - lo
+    return float(vs[lo] * (1.0 - frac) + vs[hi] * frac)
+
+
+class ServerMetrics:
+    """Thread-safe counters and a bounded latency reservoir."""
+
+    def __init__(self, reservoir: int = 8192):
+        self._lock = threading.Lock()
+        self._lat = deque(maxlen=reservoir)      # seconds, per request
+        self.submitted = 0
+        self.completed = 0
+        self.failed = 0
+        self.batches = 0
+        self.deadline_flushes = 0                # flushed by max-wait timer
+        self.size_flushes = 0                    # flushed by a full bucket
+        self.padded_slots = 0                    # bucket slots wasted on pad
+        self.recompiles = 0                      # stale-engine recoveries
+        self._t_first = None
+        self._t_last = None
+
+    def record_submit(self, n: int = 1, now: float | None = None):
+        with self._lock:
+            self.submitted += n
+            if self._t_first is None:
+                self._t_first = now
+
+    def record_batch(self, n_real: int, bucket: int, latencies,
+                     by_deadline: bool, now: float | None = None):
+        with self._lock:
+            self.batches += 1
+            self.completed += n_real
+            self.padded_slots += bucket - n_real
+            if by_deadline:
+                self.deadline_flushes += 1
+            else:
+                self.size_flushes += 1
+            self._lat.extend(latencies)
+            self._t_last = now
+
+    def record_failure(self, n: int = 1):
+        with self._lock:
+            self.failed += n
+
+    def record_recompile(self):
+        with self._lock:
+            self.recompiles += 1
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            lat = list(self._lat)
+            span = ((self._t_last - self._t_first)
+                    if self._t_first is not None and self._t_last is not None
+                    else 0.0)
+            out = {
+                "submitted": self.submitted,
+                "completed": self.completed,
+                "failed": self.failed,
+                "batches": self.batches,
+                "deadline_flushes": self.deadline_flushes,
+                "size_flushes": self.size_flushes,
+                "padded_slots": self.padded_slots,
+                "recompiles": self.recompiles,
+                "throughput_rps": (self.completed / span if span > 0
+                                   else float("nan")),
+            }
+        out["p50_ms"] = percentile(lat, 50) * 1e3 if lat else float("nan")
+        out["p99_ms"] = percentile(lat, 99) * 1e3 if lat else float("nan")
+        return out

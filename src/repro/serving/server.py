@@ -1,0 +1,228 @@
+"""HeteroServer: batched multi-plan serving on the compiled engine.
+
+The deployment half of the paper's argument: per-layer FPGA-GPU gains only
+matter if the serving loop preserves them.  ``HeteroServer`` keeps one
+compiled engine per registered (modules, plans) pair resident — SqueezeNet,
+MobileNetV2 and ShuffleNetV2 plans simultaneously, keyed by the PR-1 plan
+signature — admits single-image requests into a dynamic batcher, and
+dispatches padded bucket-sized batches from a background drain thread.
+
+    server = HeteroServer(buckets=(1, 4, 8, 32), max_wait_ms=2.0)
+    server.register("mbv2", mods, plans, params, input_hw=(96, 96))
+    with server:                        # starts the drain loop
+        fut = server.submit("mbv2", image)        # returns immediately
+        logits = fut.result()                     # de-batched row
+
+Guarantees:
+  * results are bit-identical to ``compile_network`` called one request at
+    a time — the engine is batch-invariant and padding rows are inert;
+  * every bucket shape is compile-warmed at register time, so no live
+    request pays a jit trace;
+  * a ``clear_cache()`` in ``repro.core.executor`` does not break a live
+    server: the drain loop notices the stale engine and transparently
+    recompiles (counted in ``stats()['recompiles']``).
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.core.executor import compile_network
+from repro.core.hetero import init_network
+from repro.serving.batcher import (DEFAULT_BUCKETS, DynamicBatcher, Request,
+                                   pad_batch, pick_bucket)
+from repro.serving.metrics import ServerMetrics
+
+
+class _Entry:
+    """One registered network: engine + prepared params + bucket policy."""
+
+    def __init__(self, name, mods, plans, params, input_hw, buckets,
+                 use_pallas):
+        self.name = name
+        self.mods = mods
+        self.plans = plans
+        self.params = params
+        self.input_hw = tuple(input_hw)
+        self.buckets = tuple(sorted(buckets))
+        self.use_pallas = use_pallas
+        self.engine = compile_network(mods, plans, use_pallas=use_pallas)
+        self.prepared = self.engine.prepare(params)
+        self.c_in = mods[0].nodes[0].spec.c_in
+
+    def input_shape(self, batch: int) -> tuple:
+        return (batch, *self.input_hw, self.c_in)
+
+    def warmup(self) -> dict:
+        return self.engine.warmup(
+            self.prepared, [self.input_shape(b) for b in self.buckets])
+
+    def refresh(self):
+        """Re-acquire the engine after an executor cache clear."""
+        self.engine = compile_network(self.mods, self.plans,
+                                      use_pallas=self.use_pallas)
+        self.prepared = self.engine.prepare(self.params)
+        self.warmup()
+
+
+class HeteroServer:
+    """Async dynamic-batching server over ``repro.core.executor``."""
+
+    def __init__(self, *, buckets=DEFAULT_BUCKETS, max_wait_ms: float = 2.0,
+                 use_pallas: bool | None = None):
+        self.buckets = tuple(sorted(buckets))
+        self.use_pallas = use_pallas
+        self._batcher = DynamicBatcher(max_wait_s=max_wait_ms * 1e-3,
+                                       max_batch=self.buckets[-1])
+        self._entries: dict[str, _Entry] = {}
+        self._caps: dict[str, tuple] = {}      # per-network bucket ladder
+        self.metrics = ServerMetrics()
+        self._thread: threading.Thread | None = None
+        self._stop = threading.Event()
+        self._lock = threading.Lock()
+
+    # -- registration ------------------------------------------------------
+
+    def register(self, name: str, mods, plans=None, params=None, *,
+                 input_hw=(96, 96), buckets=None, warm: bool = True,
+                 use_pallas: bool | None = None) -> dict:
+        """Compile, prepare and bucket-warm a network under ``name``.
+
+        ``buckets`` overrides the server-wide bucket ladder (per-network
+        policy: e.g. cap a cache-thrashing workload at batch 8).  Returns
+        the engine's exec stats after warm-up (one trace per bucket)."""
+        if params is None:
+            params = init_network(mods, jax.random.PRNGKey(0))
+        if use_pallas is None:
+            use_pallas = self.use_pallas    # server-wide default
+        entry = _Entry(name, mods, plans, params,
+                       input_hw, buckets or self.buckets, use_pallas)
+        with self._lock:
+            self._entries[name] = entry
+            self._caps[name] = entry.buckets
+        return entry.warmup() if warm else entry.engine.exec_stats()
+
+    def networks(self) -> list[str]:
+        with self._lock:
+            return list(self._entries)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> "HeteroServer":
+        if self._thread is not None:
+            return self
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._drain_loop,
+                                        name="hetero-serve-drain",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def shutdown(self, timeout: float = 10.0) -> None:
+        """Stop the drain loop after flushing everything still queued."""
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._batcher.put(Request("__wake__", None))   # unblock wait_ready
+        self._thread.join(timeout)
+        self._thread = None
+        for name, reqs in self._batcher.drain_all():
+            reqs = [r for r in reqs if r.network != "__wake__"]
+            if not reqs:
+                continue
+            # a backlog can exceed the largest bucket — flush in chunks
+            cap = self._caps.get(name, self.buckets)[-1]
+            for i in range(0, len(reqs), cap):
+                self._flush(name, reqs[i:i + cap], by_deadline=True)
+
+    def __enter__(self) -> "HeteroServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    # -- request path ------------------------------------------------------
+
+    def submit(self, name: str, x):
+        """Admit one image; returns a ``concurrent.futures.Future`` whose
+        result is that request's logits row."""
+        with self._lock:
+            entry = self._entries.get(name)
+        if entry is None:
+            raise KeyError(f"unregistered network {name!r}; "
+                           f"registered: {self.networks()}")
+        x = np.asarray(x) if not hasattr(x, "shape") else x
+        if tuple(x.shape) == entry.input_shape(1):
+            x = x[0]
+        want = entry.input_shape(1)[1:]
+        if tuple(x.shape) != want:
+            raise ValueError(f"{name}: expected image of shape {want} "
+                             f"(or (1, *shape)), got {tuple(x.shape)}")
+        req = Request(name, x)
+        self.metrics.record_submit(now=time.monotonic())
+        self._batcher.put(req)
+        return req.future
+
+    def submit_many(self, name: str, images) -> list:
+        return [self.submit(name, x) for x in images]
+
+    # -- drain loop --------------------------------------------------------
+
+    def _drain_loop(self) -> None:
+        while not self._stop.is_set():
+            got = self._batcher.wait_ready(timeout=0.05,
+                                           buckets_by=self._caps)
+            if got is None:
+                continue
+            name, reqs, by_deadline = got
+            reqs = [r for r in reqs if r.network != "__wake__"]
+            if reqs:
+                self._flush(name, reqs, by_deadline)
+
+    def _flush(self, name: str, reqs, by_deadline: bool) -> None:
+        with self._lock:
+            entry = self._entries.get(name)
+        if entry is None:                     # unregistered mid-flight
+            for r in reqs:
+                r.future.set_exception(KeyError(name))
+            self.metrics.record_failure(len(reqs))
+            return
+        try:
+            if not entry.engine.is_current():
+                # executor cache was cleared under us: rebuild, stay live
+                entry.refresh()
+                self.metrics.record_recompile()
+            bucket = pick_bucket(len(reqs), entry.buckets)
+            xb = pad_batch([r.x for r in reqs], bucket)
+            out = entry.engine(entry.prepared, xb)
+            out.block_until_ready()
+            # one host copy, then de-batch as numpy views — per-row device
+            # slices would pay 1 dispatch per request
+            rows = np.asarray(out)
+            now = time.monotonic()
+            lats = [now - r.t_enqueue for r in reqs]
+            for i, r in enumerate(reqs):
+                r.future.set_result(rows[i])
+            self.metrics.record_batch(len(reqs), bucket, lats, by_deadline,
+                                      now=now)
+        except Exception as e:                # pragma: no cover - defensive
+            for r in reqs:
+                if not r.future.done():
+                    r.future.set_exception(e)
+            self.metrics.record_failure(len(reqs))
+
+    # -- observability -----------------------------------------------------
+
+    def stats(self) -> dict:
+        """Server metrics + per-engine exec/trace stats + executor cache."""
+        from repro.core.executor import cache_stats
+        with self._lock:
+            engines = {name: {**e.engine.exec_stats(),
+                              "current": e.engine.is_current(),
+                              "buckets": e.buckets}
+                       for name, e in self._entries.items()}
+        return {"server": self.metrics.snapshot(), "engines": engines,
+                "executor_cache": cache_stats()}

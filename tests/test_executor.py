@@ -182,3 +182,42 @@ def test_edp_objective_never_worsens_edp():
             assert (p.cost.energy * p.cost.latency
                     < p.gpu_only.energy * p.gpu_only.latency), \
                 f"{net}/{p.module}: edp plan worsens EDP"
+
+
+def test_latency_objective_never_worsens_latency():
+    for net, builder in NETWORKS.items():
+        plans = partition_network(builder(), objective="latency")
+        assert any(p.scheme != "gpu_only" for p in plans), \
+            f"{net}: latency objective upgraded nothing"
+        for p in plans:
+            if p.scheme == "gpu_only":
+                continue
+            assert p.cost.latency < p.gpu_only.latency, \
+                f"{net}/{p.module}: latency plan worsens latency"
+
+
+def test_latency_objective_ranks_by_latency_saving_density():
+    """Mirror of the edp ranking semantics: under a budget that only fits
+    the single densest option, the greedy pass must pick the plan with the
+    best latency saved per resident resource — not the best energy saving."""
+    mods = NETWORKS["mobilenetv2"]()
+    best, best_d = None, -1.0
+    for m in mods:
+        for p in candidates(m):
+            if p.scheme == "gpu_only":
+                continue
+            saving = p.gpu_only.latency - p.cost.latency
+            if saving <= 0:
+                continue
+            d = saving / max(p.res.macs + p.res.bytes / 64.0, 1.0)
+            if d > best_d:
+                best, best_d = p, d
+    assert best is not None
+    plans = partition_network(mods, objective="latency",
+                              mac_budget=best.res.macs,
+                              byte_budget=best.res.bytes)
+    upgraded = [p for p in plans if p.scheme != "gpu_only"]
+    assert len(upgraded) == 1
+    assert upgraded[0].module == best.module
+    assert upgraded[0].scheme == best.scheme
+    assert upgraded[0].g_par == best.g_par
