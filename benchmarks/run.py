@@ -5,7 +5,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fig4   per-network hetero vs GPU-only energy/latency         (paper Fig.4)
   table1 module-family gains vs the paper's reported numbers   (paper Tab.I)
   beyond beyond-paper budgeted partitioner (all schemes)       (§Perf)
-  hetero_exec interpreted vs compiled plan execution, batch 1/8/32
+  hetero_exec interpreted vs compiled plan execution, batch 1/8/32, plus
+         per-network fused-chain coverage (fraction of FPGA conv nodes
+         lowered inside a fused group) as hetero_exec/<net>/fused_coverage
   serve  batched multi-plan serving vs sequential baselines    (§Serving):
          serve/<net>/seq_interpreted   per-request us through the oracle
          serve/<net>/seq_compiled      per-request us, engine batch-1 loop
@@ -126,7 +128,7 @@ def hetero_exec_rows(batches=(1, 8, 32), res=96):
     from repro.core.executor import compile_network
     from repro.core.graph import NETWORKS
     from repro.core.hetero import init_network, run_network
-    from repro.core.partitioner import partition_network
+    from repro.core.partitioner import fused_chain_coverage, partition_network
     rows = []
     for net, builder in NETWORKS.items():
         mods = builder()
@@ -134,6 +136,11 @@ def hetero_exec_rows(batches=(1, 8, 32), res=96):
         params = init_network(mods, jax.random.PRNGKey(0))
         engine = compile_network(mods, plans)
         prepared = engine.prepare(params)
+        cov = fused_chain_coverage(mods, plans)
+        rows.append((f"hetero_exec/{net}/fused_coverage", 0.0,
+                     f"coverage={cov['coverage']:.3f};"
+                     f"fpga_nodes={cov['fpga_nodes']};"
+                     f"fused_nodes={cov['fused_nodes']}"))
         for b in batches:
             x = jax.random.normal(jax.random.PRNGKey(1), (b, res, res, 3))
             t_i = _time(lambda: run_network(mods, params, x, plans), reps=2)

@@ -14,16 +14,23 @@ API::
                                                  # weights -> resident int8
     logits   = engine(prepared, x)               # single jitted call
 
+Plans that opted into prepare-time calibration (``Plan.calibrate``) freeze
+their activation scales from a calibration batch::
+
+    prepared = engine.prepare(params, calib_x=calib_batch)
+
 ``prepare`` is the compile-time half of the paper's DHM story: FPGA-assigned
 weights leave fp32 exactly once (int8 + per-channel scale for the GEMM path,
 fake-quantized grids for the fused/conv paths) and stay resident across
 calls, the analogue of weights living in FPGA logic.  ``engine(prepared, x)``
 is a pure function of arrays — no Python dispatch, no per-call quantization.
 
-Lowering rules (full detail in ``repro.core.lowering``):
+Lowering goes through the ``repro.core.passes`` pipeline (annotate ->
+fuse -> calibrate -> backend; full detail in the README):
 
-  - fused FPGA dw3x3+pw1x1 chains  -> ``fused_block`` Pallas kernel
-                                      (VMEM-resident intermediate)
+  - fused FPGA chains ([pw1x1 ->] dw3x3/stride -> pw1x1, stride 1 or 2)
+                                   -> ``fused_chain`` Pallas kernel
+                                      (VMEM-resident intermediates)
   - FPGA pwconv / fc               -> ``int8_gemm`` with resident int8
                                       weights quantized at prepare time
   - gconv input-channel splits     -> one concatenated XLA conv
@@ -46,6 +53,7 @@ import jax.numpy as jnp
 
 from repro.core.graph import ModuleGraph
 from repro.core.lowering import lower_network
+from repro.core.passes import chain_groups
 from repro.core.schedule import Plan
 
 
@@ -56,14 +64,23 @@ def _default_use_pallas() -> bool:
 def plan_signature(mods: list[ModuleGraph], plans: list[Plan] | None,
                    use_pallas: bool) -> tuple:
     """Hashable signature of everything lowering depends on: the graph
-    topology/specs and each plan's routing decisions.  Two equal signatures
-    lower to byte-identical programs, so the compile cache may share them."""
+    topology/specs, each plan's routing decisions, the fused chains the
+    fusion pass will actually form, and the calibration choice.  Two equal
+    signatures lower to byte-identical programs, so the compile cache may
+    share them — and calibrated plans NEVER alias uncalibrated ones (their
+    numerics differ)."""
     plan_by = {p.module: p for p in plans} if plans else {}
     sig = []
     for m in mods:
         p = plan_by.get(m.name)
-        psig = (p.scheme, tuple(sorted(p.assign.items())), tuple(p.fused),
-                tuple(sorted(p.gconv.items()))) if p else None
+        if p:
+            fused_sig = tuple(tuple(n.name for n in g)
+                              for g in chain_groups(m, p) if len(g) > 1)
+            psig = (p.scheme, tuple(sorted(p.assign.items())),
+                    tuple(p.fused), tuple(sorted(p.gconv.items())),
+                    fused_sig, bool(p.calibrate))
+        else:
+            psig = None
         sig.append((m.name, m.kind, m.output, m.residual,
                     tuple((n.name, astuple(n.spec), n.inputs, n.act)
                           for n in m.nodes),
@@ -86,19 +103,22 @@ class CompiledNetwork:
         self.signature = plan_signature(mods, plans, use_pallas)
         self.use_pallas = use_pallas
         self.generation = _GENERATION[0]
-        prepare_fn, run = lower_network(mods, plans, use_pallas)
-        self._prepare_jit = jax.jit(prepare_fn)
-        self._jitted = jax.jit(run)
+        lowered = lower_network(mods, plans, use_pallas)
+        self._prepare_fn = lowered.prepare      # jits its own internals
+        self.needs_calibration = lowered.needs_calibration
+        self._jitted = jax.jit(lowered.run)
         self._shapes_seen: set = set()
         self._exec = {"calls": 0, "traces": 0}
         # cached engines are shared across threads (serving drain loop +
         # direct callers); keep the accounting race-free
         self._stats_lock = threading.Lock()
 
-    def prepare(self, params) -> dict:
+    def prepare(self, params, calib_x=None) -> dict:
         """One-time parameter lowering: FPGA weights quantized here (int8
-        resident for the GEMM path), GPU weights passed through."""
-        return self._prepare_jit(params)
+        resident for the GEMM path), GPU weights passed through.  When the
+        plans opted into calibration (``needs_calibration``), a calibration
+        batch is required and activation scales are frozen from it."""
+        return self._prepare_fn(params, calib_x)
 
     def __call__(self, prepared, x):
         key = (tuple(x.shape), str(getattr(x, "dtype", "f32")))

@@ -8,7 +8,7 @@ priced.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 
 from repro.core.costmodel import ConvSpec
 
@@ -29,8 +29,22 @@ class ModuleGraph:
     output: str
     residual: bool = False             # bottleneck: add input to output
 
+    def __post_init__(self):
+        self._by_name = {n.name: n for n in self.nodes}
+
     def node(self, name: str) -> Node:
-        return next(n for n in self.nodes if n.name == name)
+        try:
+            return self._by_name[name]
+        except KeyError:
+            raise KeyError(f"{self.name}: no node {name!r}") from None
+
+    def has_node(self, name: str) -> bool:
+        return name in self._by_name
+
+    def consumers(self, name: str) -> list[Node]:
+        """Nodes reading ``name``'s value (computed from the cached map's
+        node list, so it stays O(nodes) per call, not O(nodes^2) per scan)."""
+        return [n for n in self.nodes if name in n.inputs]
 
     def total_macs(self) -> float:
         return sum(n.spec.macs for n in self.nodes)

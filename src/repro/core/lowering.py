@@ -1,452 +1,87 @@
-"""Lowering rules: (ModuleGraph, Plan) -> a jit-traceable program.
+"""Network-level lowering: compose the pass pipeline across modules.
 
 This is the compile-time half of the heterogeneous engine
-(``repro.core.executor`` owns the cache and the public API).  Each module is
-lowered once into a list of node *steps* — Python closures over static
-metadata — which the executor unrolls inside a single ``jax.jit`` trace, plus
-a *prepare* function that transforms the raw fp32 parameter tree once at
-compile time (weight quantization happens here, never per call).
+(``repro.core.executor`` owns the cache and the public API).  Each module
+runs through the ``repro.core.passes`` pipeline — plan annotation, chain
+fusion, calibration planning, backend emission (see the README's
+"Pass-based lowering pipeline" section for the full rule set) — and this
+module stitches the per-module programs into a network-level triple:
 
-Lowering rules, in priority order per node:
-
-  1. **Fused FPGA chain** (DHM analogue): inside a plan's ``fused`` tuple, a
-     ``dwconv`` (k=3, stride 1, relu6) immediately followed by its consumer
-     ``pwconv`` lowers to the ``fused_block`` Pallas kernel — the depthwise
-     intermediate stays VMEM-resident, exactly like DHM keeps inter-layer
-     maps inside the FPGA fabric.  Weights are fake-quantized at prepare
-     time (per-out-channel int8 grid); the activation entering the chain is
-     fake-quantized at run time.
-  2. **True-int8 FPGA GEMM**: every FPGA-assigned groups==1 conv (any k,
-     via im2col) and ``fc`` node lowers to ``int8_gemm`` — weights are
-     quantized ONCE at prepare time and kept resident as int8 (+
-     per-channel scale); only the per-sample activation quantization
-     remains in the hot path.  This replaces the interpreter's per-call
-     ``fake_quant`` round trip, and the order-exact int32 accumulation
-     makes the heavy FPGA layers batch-invariant with no row tiling.
-  3. **GConv split** (paper Fig. 2b): a node with a ``gconv`` fraction lowers
-     to a SINGLE concatenated conv — the FPGA slice's input channels and
-     weights are fake-quantized (weights at prepare time), concatenated with
-     the fp32 GPU slice, and convolved in one ``conv_general_dilated`` call
-     (convolution is linear in input channels, so this equals the summed
-     partials).
-  4. **Quantized FPGA conv**: remaining FPGA-assigned convs (depthwise /
-     grouped) keep the shift-add / XLA conv path with weights
-     fake-quantized at prepare time.
-  5. **GPU nodes** keep the fp32 XLA path unchanged.
-
-``use_pallas=False`` swaps rules 1-2 onto their pure-XLA reference kernels
-(the right choice on CPU, where Pallas runs in interpret mode); the lowered
-program and prepared parameters are identical either way.
-
-**Batch invariance** (the serving contract): every run-time step is
-row-independent in the batch dimension, so row ``i`` of a batched call is
-bit-identical to the same image run alone.  Three rules enforce this:
-activation quantization is per-sample (``axis=0`` — scales never couple
-requests sharing a batch); the int8 GEMM accumulates order-exactly (int32
-on TPU, exact-below-2^24 fp32 on CPU), so the heavy FPGA layers are
-invariant for free; and the remaining fp32 GEMMs — including every
-groups==1 conv, lowered via im2col — run in fixed row tiles
-(``_rowsafe_matmul``) because XLA:CPU picks gemm blocking from the full
-operand shapes and different blockings round differently.  ``repro.serving``
-relies on this to pad requests into bucket-sized batches without
-perturbing anyone's logits; ``tests/test_serving.py`` holds the line.
+  * ``prepare(params, calib_x=None)`` transforms the raw fp32 parameter
+    tree once at compile time (weight quantization happens here, never per
+    call).  When any plan opted into calibration, a calibration batch is
+    REQUIRED: the capture program runs it through the network, records each
+    quant site's absolute-max activation, and freezes the resulting
+    per-tensor scales into the prepared tree.
+  * ``run(prepared, x)`` is pure and jit-traceable: all routing decisions
+    were burned in at lowering time.
+  * ``needs_calibration`` tells the executor whether ``prepare`` demands a
+    calibration batch.
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, NamedTuple
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.costmodel import ConvSpec
-from repro.core.graph import ModuleGraph, Node
-from repro.core.hetero import apply_act
+from repro.core.graph import ModuleGraph
+from repro.core.passes import run_pipeline
 from repro.core.schedule import Plan
-from repro.kernels.fused_block.ops import fused_block
-from repro.kernels.int8_gemm.ops import int8_gemm
-from repro.quant import fake_quant, quantize
+from repro.quant import scale_from_amax
 
 
-# --------------------------------------------------------------------------
-# node-level step builders: each returns (prepare(params_node) -> prepared,
-#                                         run(prepared, x) -> y)
-# --------------------------------------------------------------------------
-
-_ROW_TILE = 8
-
-
-def _rowsafe_matmul(a, w, tile: int = _ROW_TILE):
-    """a (M,K) @ w (K,N) computed in fixed (tile,K)@(K,N) row blocks.
-
-    XLA:CPU picks gemm strategy (threading, cache blocking, small-M
-    kernels) from the FULL operand shapes, and different K-panel groupings
-    round differently — so row i of an (M,K) gemm is NOT bit-stable across
-    M.  Padding M to a tile multiple and mapping the same fixed-shape gemm
-    over row blocks pins the strategy, making every row's accumulation
-    chain a function of that row alone.  This is what lets ``repro.serving``
-    promise batch-size-independent logits.  Zero pad rows never enter a
-    real row's chain; ``tile`` trades scan overhead (small tile, small M)
-    against lost inter-block threading (large tile, large M)."""
-    M, K = a.shape
-    mp = -(-M // tile) * tile
-    ap = jnp.pad(a, ((0, mp - M), (0, 0)))
-    if mp == tile:
-        return (ap @ w)[:M]
-    _, out = jax.lax.scan(lambda c, t: (c, t @ w), None,
-                          ap.reshape(-1, tile, K), unroll=4)
-    return out.reshape(mp, -1)[:M]
-
-
-def _same_taps(x, k: int, s: int, fill=0.0):
-    """SAME-pad x (NHWC) for a k*k/stride-s window (XLA's lo=total//2 split)
-    and yield the k*k shifted strided (B,Ho,Wo,C) slices — the building
-    block for the shift-and-add conv/pool lowerings below."""
-    H, W = x.shape[1], x.shape[2]
-    ho, wo = -(-H // s), -(-W // s)
-    ph = max((ho - 1) * s + k - H, 0)
-    pw = max((wo - 1) * s + k - W, 0)
-    xp = jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2),
-                     (pw // 2, pw - pw // 2), (0, 0)),
-                 constant_values=fill)
-    return [(dy, dx, xp[:, dy:dy + (ho - 1) * s + 1:s,
-                        dx:dx + (wo - 1) * s + 1:s, :])
-            for dy in range(k) for dx in range(k)]
-
-
-def _dw_shift_add(w, x, k: int, s: int):
-    """Depthwise conv (multiplier 1) as k*k unrolled shift-and-adds — the
-    dataflow of the Pallas fused kernel, and far faster than XLA's generic
-    grouped-conv lowering on CPU.  w: (k,k,C)."""
-    acc = None
-    for dy, dx, sl in _same_taps(x, k, s):
-        term = sl * w[dy, dx]
-        acc = term if acc is None else acc + term
-    return acc
-
-
-def _xla_conv(spec: ConvSpec, act: str):
-    if spec.kind == "dwconv" and spec.c_out == spec.c_in and spec.k <= 5:
-        def run(p, x):
-            y = _dw_shift_add(p["w"].reshape(spec.k, spec.k, -1), x,
-                              spec.k, spec.stride)
-            return apply_act(y + p["b"], act)
-        return run
-    groups = spec.c_in if spec.kind == "dwconv" else spec.groups
-    if groups == 1:
-        # im2col + fixed-tile GEMM rather than conv_general_dilated: the
-        # row-tiled GEMM is batch-invariant (see _rowsafe_matmul) where
-        # XLA:CPU's conv — itself a gemm over B*Ho*Wo rows — is not, and
-        # for the small late-stage maps it also dodges conv's fixed per-op
-        # cost.  The tile is a function of the spatial size only, so every
-        # batch size lowers to the same per-block gemm shape.
-        def run(p, x):
-            y = _conv_im2col(x, p["w"], spec.k, spec.stride)
-            return apply_act(y + p["b"], act)
-        return run
-
-    def run(p, x):
-        # grouped-conv fallback; unused by the paper networks (their only
-        # grouped convs are depthwise, handled by the shift-add path) and
-        # NOT batch-invariant — keep new graphs off this path if they are
-        # to be served batched
-        y = jax.lax.conv_general_dilated(
-            x, p["w"], window_strides=(spec.stride, spec.stride),
-            padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"),
-            feature_group_count=groups)
-        return apply_act(y + p["b"], act)
-    return run
-
-
-def _spatial_tile(hw: int) -> int:
-    """Row tile for a fp32 (B*Ho*Wo, K) GEMM: one sample's rows per tile,
-    so batch 1 pays no padding and every batch size sees the same block
-    shape.  Depends on the spatial size only — never on batch.  (The heavy
-    FPGA layers take the int8 GEMM path instead, which is order-exact and
-    needs no tiling; fp32 tiles only carry the cheap GPU-side glue.)"""
-    return -(-hw // _ROW_TILE) * _ROW_TILE
-
-
-def _conv_im2col(x, w, k: int, s: int):
-    """SAME conv as a row-tiled (B*Ho*Wo, k*k*C) @ (k*k*C, Co) GEMM."""
-    C, co = x.shape[-1], w.shape[-1]
-    if k == 1 and s == 1:
-        cols = x
-    else:
-        cols = jnp.concatenate([sl for _dy, _dx, sl in _same_taps(x, k, s)],
-                               axis=-1)
-    y = _rowsafe_matmul(cols.reshape(-1, k * k * C), w.reshape(-1, co),
-                        tile=_spatial_tile(cols.shape[1] * cols.shape[2]))
-    return y.reshape(*cols.shape[:3], co)
-
-
-def _lower_gpu(n: Node):
-    if n.spec.kind == "fc":
-        def run(p, x):
-            y = _rowsafe_matmul(x.reshape(x.shape[0], -1), p["w"])
-            return apply_act(y + p["b"], n.act)
-    else:
-        run = _xla_conv(n.spec, n.act)
-    return (lambda p: {"w": p["w"], "b": p["b"]}), run
-
-
-def _lower_fpga_fq(n: Node):
-    """FPGA conv that cannot use the int8 GEMM: weights fake-quantized once
-    at prepare time, activation fake-quantized per call (per-sample scales:
-    batching must not change any request's numerics), XLA conv."""
-    conv = _xla_conv(n.spec, n.act)
-
-    def prepare(p):
-        return {"w": fake_quant(p["w"], axis=-1), "b": p["b"]}
-
-    def run(p, x):
-        return conv(p, fake_quant(x, axis=0))
-    return prepare, run
-
-
-def _lower_fpga_int8(n: Node, use_pallas: bool):
-    """True-int8 path: any groups==1 FPGA conv (via im2col) or fc as an
-    int8 GEMM with resident int8 weights.  The int32 accumulation is
-    order-exact, so this path is batch-invariant with full cross-sample
-    vectorization — no row tiling needed — and it is the faithful DHM
-    substrate: the FPGA computes in 8-bit fixed point end to end."""
-    spec = n.spec
-
-    def prepare(p):
-        w2d = p["w"].reshape(-1, spec.c_out)   # (k*k*C, co) for convs
-        w_q, w_s = quantize(w2d, axis=-1)
-        return {"w_q": w_q, "w_s": w_s.reshape(-1), "b": p["b"]}
-
-    def run(p, x):
-        # per-sample activation scales (axis=0): each request in a served
-        # batch quantizes exactly as it would alone
-        x_q4, x_s4 = quantize(x, axis=0)
-        if spec.kind == "fc":
-            y = int8_gemm(x_q4.reshape(x.shape[0], -1), p["w_q"],
-                          x_s4.reshape(x.shape[0], 1), p["w_s"],
-                          use_pallas=use_pallas)
-            return apply_act(y + p["b"], n.act)
-        if spec.k == 1 and spec.stride == 1:
-            cols = x_q4
-        else:
-            cols = jnp.concatenate(
-                [sl for _dy, _dx, sl in
-                 _same_taps(x_q4, spec.k, spec.stride, fill=0)], axis=-1)
-        lead = cols.shape[:3]
-        x_s = jnp.broadcast_to(x_s4, (*lead, 1)).reshape(-1, 1)
-        y = int8_gemm(cols.reshape(-1, cols.shape[-1]), p["w_q"], x_s,
-                      p["w_s"], use_pallas=use_pallas)
-        y = (y + p["b"]).reshape(*lead, spec.c_out)
-        return apply_act(y, n.act)
-    return prepare, run
-
-
-def _lower_fused_pair(dw: Node, pw: Node, use_pallas: bool):
-    """dw3x3(relu6) + pw1x1 through the fused_block Pallas kernel; the
-    intermediate never leaves VMEM (no fake-quant round trip between the
-    stages — the DHM on-chip residency semantics)."""
-    def prepare(p_dw, p_pw):
-        dw_w = fake_quant(p_dw["w"].reshape(3, 3, -1), axis=-1)
-        pw_w = fake_quant(p_pw["w"].reshape(-1, pw.spec.c_out), axis=-1)
-        return {"dw_w": dw_w, "dw_b": p_dw["b"],
-                "pw_w": pw_w, "pw_b": p_pw["b"]}
-
-    if use_pallas:
-        def run(p, x):
-            y = fused_block(fake_quant(x, axis=0), p["dw_w"], p["dw_b"],
-                            p["pw_w"], p["pw_b"], use_pallas=True)
-            return apply_act(y, pw.act)
-    else:
-        def run(p, x):
-            # same fused dataflow in plain XLA: shift-add dw, relu6, one GEMM
-            x = fake_quant(x, axis=0)
-            h = jnp.clip(_dw_shift_add(p["dw_w"], x, 3, 1) + p["dw_b"],
-                         0.0, 6.0)
-            y = _rowsafe_matmul(h.reshape(-1, h.shape[-1]), p["pw_w"],
-                                tile=_spatial_tile(h.shape[1] * h.shape[2]))
-            y = y + p["pw_b"]
-            return apply_act(y.reshape(*h.shape[:-1], pw.spec.c_out), pw.act)
-    return prepare, run
-
-
-def _lower_gconv(n: Node, frac: float):
-    """Paper Fig. 2b input-channel split, lowered to ONE concatenated conv:
-    channels [:g] carry the FPGA's quantized slice, [g:] the GPU's fp32
-    slice; linearity in input channels makes the single conv equal the
-    summed partials."""
-    spec = n.spec
-    g = max(1, int(round(spec.c_in * frac)))
-    conv = _xla_conv(spec, n.act)
-
-    def prepare(p):
-        w = p["w"]
-        w_cat = jnp.concatenate(
-            [fake_quant(w[..., :g, :], axis=-1), w[..., g:, :]], axis=-2)
-        return {"w": w_cat, "b": p["b"]}
-
-    def run(p, x):
-        x_cat = jnp.concatenate([fake_quant(x[..., :g], axis=0), x[..., g:]],
-                                axis=-1)
-        return conv(p, x_cat)
-    return prepare, run
-
-
-def _pool_shift(x, k: int, s: int, fill, combine):
-    """Pooling as k*k shifted strided slices combined elementwise — the
-    same trick as ``_dw_shift_add``; XLA:CPU's ``reduce_window`` is a
-    fixed-cost scalar loop that dwarfs the actual work."""
-    acc = None
-    for _dy, _dx, sl in _same_taps(x, k, s, fill=fill):
-        acc = sl if acc is None else combine(acc, sl)
-    return acc
-
-
-def _lower_pointfree(n: Node):
-    """Parameter-free ops (pool/gap/concat/add/split/shuffle)."""
-    spec = n.spec
-    kind = spec.kind
-    if kind == "maxpool":
-        return lambda xs: _pool_shift(xs[0], spec.k, spec.stride,
-                                      -jnp.inf, jnp.maximum)
-    if kind == "avgpool":
-        def run(xs):
-            s = _pool_shift(xs[0], spec.k, spec.stride, 0.0, jnp.add)
-            return s / (spec.k * spec.k)
-        return run
-    if kind == "gap":
-        return lambda xs: xs[0].mean(axis=(1, 2), keepdims=True)
-    if kind == "concat":
-        return lambda xs: jnp.concatenate(xs, axis=-1)
-    if kind == "add":
-        return lambda xs: xs[0] + xs[1]
-    if kind == "split":
-        return lambda xs: xs[0][..., :spec.c_out]
-    if kind == "shuffle":
-        def run(xs):
-            x = xs[0]
-            b, h, w, c = x.shape
-            return (x.reshape(b, h, w, 2, c // 2)
-                    .transpose(0, 1, 2, 4, 3).reshape(b, h, w, c))
-        return run
-    raise ValueError(kind)
-
-
-# --------------------------------------------------------------------------
-# module-level lowering
-# --------------------------------------------------------------------------
-
-_CONVISH = ("conv", "dwconv", "pwconv", "fc")
-
-
-def _fused_pairs(m: ModuleGraph, plan: Plan | None) -> dict[str, str]:
-    """dw->pw pairs inside the plan's fused chain that fused_block can take:
-    dw3x3 stride 1 with relu6, immediately consumed by a 1x1 pwconv."""
-    if not plan or not plan.fused:
-        return {}
-    pairs: dict[str, str] = {}
-    names = [nm for nm in plan.fused if any(n.name == nm for n in m.nodes)]
-    for a_nm, b_nm in zip(names, names[1:]):
-        a, b = m.node(a_nm), m.node(b_nm)
-        sole_consumer = all(a.name not in n.inputs for n in m.nodes
-                            if n.name != b.name)
-        if (a.spec.kind == "dwconv" and a.spec.k == 3 and a.spec.stride == 1
-                and a.act == "relu6" and b.spec.kind == "pwconv"
-                and b.spec.k == 1 and b.spec.stride == 1
-                and b.inputs == (a.name,) and sole_consumer
-                and a.name not in pairs.values()):
-            pairs[a.name] = b.name
-    return pairs
-
-
-def lower_module(m: ModuleGraph, plan: Plan | None, use_pallas: bool):
-    """Returns (prepare(params_m) -> prepared_m, run(prepared_m, x) -> y)."""
-    assign = plan.assign if plan else {}
-    gconv = plan.gconv if plan else {}
-    pairs = _fused_pairs(m, plan)
-    consumed = set(pairs.values())
-
-    preps: dict[str, Callable] = {}
-    # steps: (value_name, kind, payload) unrolled in node order at trace time
-    steps: list[tuple] = []
-    for n in m.nodes:
-        if m.kind == "shuffle_unit" and n.name in ("split", "cat"):
-            steps.append((n.name, "shuffle_glue", None))
-            continue
-        if n.name in consumed:
-            continue                       # produced by the fused pair step
-        if n.spec.kind in _CONVISH:
-            fpga = assign.get(n.name) == "fpga"
-            if n.name in pairs:
-                pw = m.node(pairs[n.name])
-                prep, run = _lower_fused_pair(n, pw, use_pallas)
-                preps[n.name] = prep
-                steps.append((pairs[n.name], "fused", (n.name, n.inputs, run)))
-                continue
-            if n.name in gconv:
-                prep, run = _lower_gconv(n, gconv[n.name])
-            elif fpga and (n.spec.kind == "fc"
-                           or (n.spec.kind in ("conv", "pwconv")
-                               and n.spec.groups == 1)):
-                prep, run = _lower_fpga_int8(n, use_pallas)
-            elif fpga:
-                prep, run = _lower_fpga_fq(n)
-            else:
-                prep, run = _lower_gpu(n)
-            preps[n.name] = prep
-            steps.append((n.name, "param", (n.name, n.inputs, run)))
-        else:
-            steps.append((n.name, "free", (n.inputs, _lower_pointfree(n))))
-
-    def prepare(params_m):
-        out = {}
-        for nm, prep in preps.items():
-            if nm in pairs:                # fused pair: two raw param leaves
-                out[nm] = prep(params_m[nm], params_m[pairs[nm]])
-            else:
-                out[nm] = prep(params_m[nm])
-        return out
-
-    def run(prepared_m, x):
-        values = {"in": x}
-        for out_name, kind, payload in steps:
-            if kind == "shuffle_glue":
-                if out_name == "split":
-                    half = m.node("split").spec.c_out
-                    values["split"] = x[..., half:]
-                    values["_identity"] = x[..., :half]
-                else:
-                    values["cat"] = jnp.concatenate(
-                        [values["_identity"],
-                         values[m.node("cat").inputs[1]]], axis=-1)
-                continue
-            if kind == "free":
-                inputs, fn = payload
-                values[out_name] = fn([values[i] for i in inputs])
-                continue
-            pname, inputs, fn = payload
-            values[out_name] = fn(prepared_m[pname], values[inputs[0]])
-        out = values[m.output]
-        if m.residual:
-            out = out + x
-        return out
-
-    return prepare, run
+class LoweredNetwork(NamedTuple):
+    prepare: Callable        # (params, calib_x=None) -> prepared
+    run: Callable            # (prepared, x) -> logits
+    needs_calibration: bool
 
 
 def lower_network(mods: list[ModuleGraph], plans: list[Plan] | None,
-                  use_pallas: bool):
-    """Lower the whole network; returns (prepare(params) -> prepared,
-    run(prepared, x) -> logits).  ``run`` is pure and jit-traceable: all
-    routing decisions were burned in here, at lowering time."""
+                  use_pallas: bool) -> LoweredNetwork:
     plan_by = {p.module: p for p in plans} if plans else {}
-    lowered = [(m.name, lower_module(m, plan_by.get(m.name), use_pallas))
+    lowered = [(m.name, run_pipeline(m, plan_by.get(m.name), use_pallas))
                for m in mods]
+    needs_calibration = any(lm.ir.calib_sites for _name, lm in lowered)
 
-    def prepare(params):
-        return {name: prep(params[name]) for name, (prep, _run) in lowered}
+    def prepare_params(params):
+        return {name: lm.prepare(params[name]) for name, lm in lowered}
+
+    def capture_scales(prepared, x):
+        """Forward the calibration batch (per-sample quantization — the
+        uncalibrated fallback) and freeze one per-tensor scale per site."""
+        scales = {}
+        for name, lm in lowered:
+            if lm.ir.calib_sites:
+                x, amaxes = lm.capture(prepared[name], x)
+                scales[name] = {site: scale_from_amax(a)
+                                for site, a in amaxes.items()}
+            else:
+                x = lm.run(prepared[name], x)
+        return scales
+
+    prepare_jit = jax.jit(prepare_params)
+    capture_jit = jax.jit(capture_scales)
+
+    def prepare(params, calib_x=None):
+        prepared = prepare_jit(params)
+        if not needs_calibration:
+            return prepared
+        if calib_x is None:
+            raise ValueError(
+                "plans request calibration (Plan.calibrate=True): prepare "
+                "needs a calibration batch (prepare(params, calib_x=...))")
+        scales = capture_jit(prepared, calib_x)
+        out = dict(prepared)
+        for name, site_scales in scales.items():
+            mod_prepared = dict(out[name])
+            for site, s in site_scales.items():
+                mod_prepared[site] = {**mod_prepared[site], "x_scale": s}
+            out[name] = mod_prepared
+        return out
 
     def run(prepared, x):
-        for name, (_prep, run_m) in lowered:
-            x = run_m(prepared[name], x)
+        for name, lm in lowered:
+            x = lm.run(prepared[name], x)
         return x.reshape(x.shape[0], -1)
 
-    return prepare, run
+    return LoweredNetwork(prepare, run, needs_calibration)

@@ -16,10 +16,8 @@ partitioner therefore works in two stages:
 """
 from __future__ import annotations
 
-from dataclasses import replace
-
 from repro.core import costmodel as cm
-from repro.core.costmodel import ConvSpec, Cost, ZERO
+from repro.core.costmodel import Cost, ZERO
 from repro.core.graph import ModuleGraph, Node
 from repro.core.schedule import (Plan, Resources, fpga_chain_cost,
                                  fpga_resources, gpu_cost, module_gpu_only,
@@ -271,6 +269,28 @@ def partition_network(modules: list[ModuleGraph], objective: str = "paper",
         macs_left -= p.res.macs
         bytes_left -= p.res.bytes
     return [chosen[m.name] for m in modules]
+
+
+def fused_chain_coverage(modules: list[ModuleGraph],
+                         plans: list[Plan]) -> dict:
+    """How much of the FPGA-assigned conv work the fusion pass captures:
+    the fraction of FPGA conv-ish nodes that land inside a fused group of
+    length >= 2 (the paper's DHM wins hinge on whole chains staying
+    on-fabric, so this is the coverage number the benchmarks report)."""
+    from repro.core.passes import chain_groups
+    convish = ("conv", "dwconv", "pwconv", "fc")
+    plan_by = {p.module: p for p in plans}
+    fpga_nodes = fused_nodes = 0
+    for m in modules:
+        p = plan_by.get(m.name)
+        if p is None:
+            continue
+        fpga_nodes += sum(1 for n in m.nodes
+                          if n.spec.kind in convish
+                          and p.assign.get(n.name) == "fpga")
+        fused_nodes += sum(len(g) for g in chain_groups(m, p) if len(g) > 1)
+    return {"fpga_nodes": fpga_nodes, "fused_nodes": fused_nodes,
+            "coverage": fused_nodes / fpga_nodes if fpga_nodes else 0.0}
 
 
 def summarize(plans: list[Plan]) -> dict:

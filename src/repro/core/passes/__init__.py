@@ -1,0 +1,47 @@
+"""The lowering pass pipeline: (ModuleGraph, Plan) -> executable program.
+
+Fixed pass order (each pass is a pure IR transform; ``backend_pass`` emits
+the closures the executor jits):
+
+    annotate_pass -> fuse_pass -> calibrate_pass -> backend_pass
+
+``run_pipeline`` drives it for one module.  ``repro.core.lowering`` composes
+the per-module programs into the network-level prepare/run/capture triple.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+from repro.core.graph import ModuleGraph
+from repro.core.passes.annotate import annotate_pass
+from repro.core.passes.backend import backend_pass
+from repro.core.passes.calibrate import calibrate_pass
+from repro.core.passes.fuse import chain_groups, cost_groups, fuse_pass
+from repro.core.passes.ir import Chain, LoweredModule, ModuleIR, NodeAnn
+
+if TYPE_CHECKING:
+    from repro.core.schedule import Plan
+
+PIPELINE = (annotate_pass, fuse_pass, calibrate_pass)
+
+
+def build_ir(m: ModuleGraph, plan: "Plan | None",
+             use_pallas: bool) -> ModuleIR:
+    """Run the analysis passes (everything before backend emission)."""
+    ir = ModuleIR(m, plan, use_pallas)
+    for p in PIPELINE:
+        ir = p(ir)
+    return ir
+
+
+def run_pipeline(m: ModuleGraph, plan: "Plan | None",
+                 use_pallas: bool) -> LoweredModule:
+    """Full pipeline for one module: analysis passes + backend emission."""
+    return backend_pass(build_ir(m, plan, use_pallas))
+
+
+__all__ = [
+    "Chain", "LoweredModule", "ModuleIR", "NodeAnn", "PIPELINE",
+    "annotate_pass", "backend_pass", "build_ir", "calibrate_pass",
+    "chain_groups", "cost_groups", "fuse_pass", "run_pipeline",
+]

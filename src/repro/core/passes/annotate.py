@@ -1,0 +1,41 @@
+"""Plan-annotation pass: tag every graph node with device + lowering path.
+
+This is the pipeline's front door: it turns the partition plan's routing
+decisions (``assign`` / ``gconv``) into per-node ``NodeAnn`` records that
+the later passes refine.  Priority order per conv-ish node:
+
+  gconv split  >  true-int8 GEMM (fc / groups==1 conv on FPGA)
+               >  fake-quantized FPGA conv  >  fp32 GPU path
+"""
+from __future__ import annotations
+
+from repro.core.passes.ir import (_CONVISH, PATH_FQ, PATH_FREE, PATH_GCONV,
+                                  PATH_GLUE, PATH_GPU, PATH_INT8, ModuleIR,
+                                  NodeAnn)
+
+
+def annotate_pass(ir: ModuleIR) -> ModuleIR:
+    m, plan = ir.module, ir.plan
+    assign = plan.assign if plan else {}
+    gconv = plan.gconv if plan else {}
+    for n in m.nodes:
+        if m.kind == "shuffle_unit" and n.name in ("split", "cat"):
+            ir.ann[n.name] = NodeAnn(n, "gpu", PATH_GLUE)
+            continue
+        if n.spec.kind not in _CONVISH:
+            ir.ann[n.name] = NodeAnn(n, "gpu", PATH_FREE)
+            continue
+        fpga = assign.get(n.name) == "fpga"
+        device = "fpga" if fpga or n.name in gconv else "gpu"
+        if n.name in gconv:
+            ann = NodeAnn(n, device, PATH_GCONV, gconv_frac=gconv[n.name])
+        elif fpga and (n.spec.kind == "fc"
+                       or (n.spec.kind in ("conv", "pwconv")
+                           and n.spec.groups == 1)):
+            ann = NodeAnn(n, device, PATH_INT8)
+        elif fpga:
+            ann = NodeAnn(n, device, PATH_FQ)
+        else:
+            ann = NodeAnn(n, device, PATH_GPU)
+        ir.ann[n.name] = ann
+    return ir

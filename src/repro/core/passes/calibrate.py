@@ -1,0 +1,33 @@
+"""Calibration pass: mark activation-quant sites whose scales freeze at
+prepare time.
+
+When a plan opts in (``Plan.calibrate``), every FPGA activation-quantization
+site — fused-chain entries, int8-GEMM inputs, fake-quant conv inputs and
+gconv FPGA slices — is recorded by name.  The backend then emits a
+``capture`` program that runs a calibration batch through the module and
+returns each site's absolute-max activation; ``prepare`` freezes those into
+per-tensor scales, and the run program drops the per-call amax reductions.
+
+Plans that do NOT opt in keep per-sample scales (``axis=0``), preserving
+the serving batch-invariance contract exactly as before.  Frozen scales
+preserve it trivially — a constant scale can't couple batch rows — but
+they change numerics, so calibrated and uncalibrated plans compile (and
+cache, and serve) under different plan signatures.
+"""
+from __future__ import annotations
+
+from repro.core.passes.ir import PATH_FQ, PATH_GCONV, PATH_INT8, ModuleIR
+
+
+def calibrate_pass(ir: ModuleIR) -> ModuleIR:
+    if not ir.plan or not getattr(ir.plan, "calibrate", False):
+        return ir
+    in_chain = {nm for c in ir.chains for nm in c.names()}
+    sites = [c.head for c in ir.chains]
+    sites += [nm for nm, a in ir.ann.items()
+              if a.path in (PATH_INT8, PATH_FQ, PATH_GCONV)
+              and nm not in in_chain]
+    # execution order (graph node order) keeps capture deterministic
+    order = {n.name: i for i, n in enumerate(ir.module.nodes)}
+    ir.calib_sites = tuple(sorted(sites, key=lambda nm: order[nm]))
+    return ir

@@ -1,0 +1,106 @@
+"""Chain-fusion pass: group FPGA-resident runs into fused-kernel chains.
+
+Generalizes the original dw3x3+pw1x1 pairing to every chain shape the
+``fused_chain`` kernel executes in one VMEM-resident sweep:
+
+  * dw3x3 (stride 1 or 2) -> pw1x1                (MBv2 tails, ShuffleNetV2
+                                                   down-branch 1)
+  * pw1x1 -> dw3x3 (stride 1 or 2) -> pw1x1       (ShuffleNetV2 working
+                                                   branches, MBv2 full
+                                                   expand+dw+project)
+
+The same grouping drives the partitioner's cost model (``cost_groups``):
+each fused group pays one pipeline fill, so longer fusable chains reduce
+per-node FPGA overheads — which is exactly why the plan search should
+prefer them.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Callable
+
+from repro.core.graph import ModuleGraph, Node
+from repro.core.passes.ir import PATH_GCONV, Chain, ModuleIR
+
+if TYPE_CHECKING:
+    from repro.core.schedule import Plan
+
+_CHAIN_ACTS = ("none", "relu", "relu6")
+
+
+def _is_pw(n: Node) -> bool:
+    return (n.spec.kind == "pwconv" and n.spec.k == 1
+            and n.spec.stride == 1 and n.spec.groups == 1
+            and n.act in _CHAIN_ACTS)
+
+
+def _is_dw(n: Node) -> bool:
+    """dw3x3 multiplier-1, stride 1 or 2 — what the kernel's shift-add
+    stage implements."""
+    return (n.spec.kind == "dwconv" and n.spec.k == 3
+            and n.spec.stride in (1, 2) and n.spec.c_in == n.spec.c_out
+            and n.act in _CHAIN_ACTS)
+
+
+def _group_linear(nodes: list[Node],
+                  linked: Callable[[Node, Node], bool]) -> list[list[Node]]:
+    """Greedy longest-match grouping of an ordered node list: pw-dw-pw
+    first, then dw-pw, else singleton.  ``linked(a, b)`` decides whether
+    b may consume a inside a fused pipeline."""
+    groups: list[list[Node]] = []
+    i = 0
+    while i < len(nodes):
+        trio = nodes[i:i + 3]
+        if (len(trio) == 3 and _is_pw(trio[0]) and _is_dw(trio[1])
+                and _is_pw(trio[2]) and linked(trio[0], trio[1])
+                and linked(trio[1], trio[2])):
+            groups.append(trio)
+            i += 3
+            continue
+        duo = nodes[i:i + 2]
+        if (len(duo) == 2 and _is_dw(duo[0]) and _is_pw(duo[1])
+                and linked(duo[0], duo[1])):
+            groups.append(duo)
+            i += 2
+            continue
+        groups.append([nodes[i]])
+        i += 1
+    return groups
+
+
+def chain_groups(m: ModuleGraph, plan: "Plan | None") -> list[list[Node]]:
+    """Fusable groups inside ``plan.fused`` (singletons included).  A link
+    a->b holds when b is a's sole consumer, a is not the module output,
+    and both are FPGA-assigned outside any gconv split."""
+    if not plan or not plan.fused:
+        return []
+    names = [nm for nm in plan.fused if m.has_node(nm)]
+    nodes = [m.node(nm) for nm in names]
+    eligible = {
+        n.name for n in nodes
+        if plan.assign.get(n.name) == "fpga" and n.name not in plan.gconv}
+
+    def linked(a: Node, b: Node) -> bool:
+        return (a.name in eligible and b.name in eligible
+                and b.inputs == (a.name,) and a.name != m.output
+                and len(m.consumers(a.name)) == 1)
+
+    return _group_linear(nodes, linked)
+
+
+def cost_groups(nodes: list[Node]) -> list[list[Node]]:
+    """Grouping for the COST model, where chains arrive as bare node lists
+    (possibly synthetic): adjacency-only links — the sole-consumer check
+    needs the module graph, but a mis-grouped multi-consumer node can only
+    appear in non-linear chains that the patterns reject anyway."""
+    return _group_linear(nodes, lambda a, b: b.inputs == (a.name,))
+
+
+def fuse_pass(ir: ModuleIR) -> ModuleIR:
+    """Attach ``Chain``s for every fusable group of length >= 2."""
+    for group in chain_groups(ir.module, ir.plan):
+        if len(group) < 2:
+            continue
+        if any(ir.ann[n.name].path == PATH_GCONV for n in group):
+            continue                    # defensive: gconv never fuses
+        ir.chains.append(Chain(tuple(group)))
+    return ir

@@ -1,0 +1,97 @@
+"""Typed lowering IR shared by the compiler passes.
+
+A module is lowered through an explicit pipeline (annotate -> fuse ->
+calibrate -> backend).  Each pass reads and refines a ``ModuleIR``:
+
+  * ``annotate``  tags every graph node with its device and lowering path
+                  (``NodeAnn``) from the partition plan;
+  * ``fuse``      groups FPGA-resident runs of nodes into ``Chain``s the
+                  fused kernel can execute in one VMEM-resident sweep;
+  * ``calibrate`` marks the activation-quantization sites whose scales can
+                  be frozen at prepare time (plan-gated);
+  * ``backend``   emits the executable program (prepare / run / capture
+                  closures consumed by ``repro.core.executor``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Callable
+
+from repro.core.graph import ModuleGraph, Node
+
+if TYPE_CHECKING:                       # no runtime import: schedule imports
+    from repro.core.schedule import Plan     # the fuse pass for its cost model
+
+# lowering paths a node can take (NodeAnn.path)
+PATH_GPU = "gpu"                # fp32 XLA path, unchanged
+PATH_INT8 = "int8_gemm"         # true-int8 GEMM, resident int8 weights
+PATH_FQ = "fake_quant"          # FPGA conv with fake-quantized weights
+PATH_GCONV = "gconv"            # paper Fig.2b input-channel split
+PATH_FREE = "free"              # parameter-free op (pool/concat/...)
+PATH_GLUE = "shuffle_glue"      # shuffle-unit split/cat bookkeeping
+
+_CONVISH = ("conv", "dwconv", "pwconv", "fc")
+
+
+@dataclass
+class NodeAnn:
+    """Per-node device/quantization annotation (plan-annotation pass)."""
+    node: Node
+    device: str                        # "gpu" | "fpga"
+    path: str                          # one of the PATH_* tags
+    gconv_frac: float | None = None    # set when path == PATH_GCONV
+
+
+@dataclass(frozen=True)
+class Chain:
+    """A fused FPGA chain: [lead pw1x1] -> dw3x3/stride -> pw1x1."""
+    nodes: tuple[Node, ...]            # length 2 (dw,pw) or 3 (pw,dw,pw)
+
+    @property
+    def lead(self) -> Node | None:
+        return self.nodes[0] if len(self.nodes) == 3 else None
+
+    @property
+    def dw(self) -> Node:
+        return self.nodes[-2]
+
+    @property
+    def pw(self) -> Node:
+        return self.nodes[-1]
+
+    @property
+    def head(self) -> str:
+        """Name keying the chain's prepared params and its quant site."""
+        return self.nodes[0].name
+
+    @property
+    def out(self) -> str:
+        """Value name the chain produces (the last node's)."""
+        return self.nodes[-1].name
+
+    @property
+    def stride(self) -> int:
+        return self.dw.spec.stride
+
+    def names(self) -> tuple[str, ...]:
+        return tuple(n.name for n in self.nodes)
+
+
+@dataclass
+class ModuleIR:
+    """One module's state as it moves through the pass pipeline."""
+    module: ModuleGraph
+    plan: "Plan | None"
+    use_pallas: bool
+    ann: dict[str, NodeAnn] = field(default_factory=dict)
+    chains: list[Chain] = field(default_factory=list)
+    calib_sites: tuple[str, ...] = ()
+
+
+@dataclass
+class LoweredModule:
+    """Backend-pass output: the executable program for one module."""
+    ir: ModuleIR
+    prepare: Callable                  # params_m -> prepared_m
+    run: Callable                      # (prepared_m, x) -> y
+    capture: Callable                  # (prepared_m, x) -> (y, {site: amax})

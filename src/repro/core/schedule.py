@@ -40,6 +40,7 @@ class Plan:
     gpu_only: Cost = ZERO
     res: Resources = Resources()
     note: str = ""
+    calibrate: bool = False        # freeze activation scales at prepare time
 
     @property
     def energy_gain(self) -> float:
@@ -69,8 +70,23 @@ def gpu_cost(nodes: list[Node]) -> Cost:
 
 def fpga_chain_cost(nodes: list[Node], in_bytes: int, out_bytes: int,
                     g_par: int = 1) -> Cost:
-    """A chain executed on the FPGA with DHM fusion; PCIe in and out."""
-    comp = cm.FPGA.fused_cost([n.spec for n in nodes], [g_par] * len(nodes))
+    """A chain executed on the FPGA with DHM fusion; PCIe in and out.
+
+    The chain is priced by the SAME grouping the lowering fusion pass
+    applies: each kernel-fusable group (dw-pw pair, pw-dw-pw, stride-2
+    variants) streams as one pipeline and pays one fill; group boundaries
+    restart the pipeline (the intermediate stays on-chip, so no PCIe, but
+    the fill is paid again).  Longer fusable chains therefore genuinely
+    reduce per-node FPGA overheads — and the partitioner, pricing with
+    this function, learns to prefer them."""
+    # function-level import: repro.core.passes.backend imports this module
+    # for type info only, but passes/__init__ pulls the whole pipeline in —
+    # importing it lazily keeps schedule importable first in any order
+    from repro.core.passes.fuse import cost_groups
+    comp = ZERO
+    for group in cost_groups(nodes):
+        comp = comp + cm.FPGA.fused_cost([n.spec for n in group],
+                                         [g_par] * len(group))
     xin = cm.PCIE.xfer(in_bytes)
     xout = cm.PCIE.xfer(out_bytes)
     return Cost(xin.latency + comp.latency + xout.latency,

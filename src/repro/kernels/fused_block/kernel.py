@@ -1,11 +1,23 @@
-"""Pallas TPU kernel: fused dw3x3 + ReLU6 + pw1x1 — the DHM analogue.
+"""Pallas TPU kernel: fused FPGA-chain execution — the DHM analogue.
 
-DHM's insight re-expressed for the TPU memory hierarchy: the depthwise
-intermediate NEVER touches HBM — it is produced and consumed inside VMEM,
-exactly like DHM keeps inter-layer feature maps inside the FPGA fabric.
-Grid is (batch,); each program streams one feature map through both stages.
-The pointwise stage hits the MXU with an (H*W, C) x (C, Co) matmul whose
-dims are padded to 128 multiples by the wrapper (ops.py).
+DHM's insight re-expressed for the TPU memory hierarchy: every intermediate
+of a fused chain is produced and consumed inside VMEM — it never touches
+HBM — exactly like DHM keeps inter-layer feature maps inside the FPGA
+fabric.  Grid is (batch,); each program streams one feature map through the
+whole chain.
+
+Chain shapes (all static, burned into the kernel at trace time):
+
+  * optional leading pw1x1 (+ its activation) — the ShuffleNetV2
+    pw-dw-pw working branch, or MobileNetV2's expand+dw+project tail;
+  * dw3x3 at stride 1 or 2 (+ activation none/relu/relu6) — stride-2
+    covers the down-sampling stages that previously lowered node-by-node;
+  * trailing pw1x1 on the MXU ((Ho*Wo, C) x (C, Co) matmul); its
+    activation is applied by the caller.
+
+The kernel takes the UNPADDED input block and SAME-pads the depthwise
+input in VMEM (padding must happen after the leading pointwise stage:
+``act(0 @ w + b)`` is not zero at pad positions).
 """
 from __future__ import annotations
 
@@ -16,41 +28,89 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(xp_ref, dww_ref, dwb_ref, pww_ref, pwb_ref, out_ref):
-    # xp: (1, H+2, W+2, C) pre-padded input block in VMEM
-    xp = xp_ref[0]
-    H = out_ref.shape[1]
-    W = out_ref.shape[2]
+def _act(x, kind: str):
+    if kind == "relu":
+        return jnp.maximum(x, 0.0)
+    if kind == "relu6":
+        return jnp.clip(x, 0.0, 6.0)
+    return x
+
+
+def _chain_kernel(refs, *, has_lead: bool, stride: int, act_lead: str,
+                  act_dw: str):
+    if has_lead:
+        x_ref, lw_ref, lb_ref, dww_ref, dwb_ref, pww_ref, pwb_ref, out_ref \
+            = refs
+    else:
+        x_ref, dww_ref, dwb_ref, pww_ref, pwb_ref, out_ref = refs
+    x = x_ref[0]                            # (H, W, C) unpadded, in VMEM
+    H, W = x.shape[0], x.shape[1]
+    Ho, Wo = out_ref.shape[1], out_ref.shape[2]
+    if has_lead:
+        h = jnp.dot(x.reshape(H * W, -1), lw_ref[...],
+                    preferred_element_type=jnp.float32)
+        h = _act(h + lb_ref[...][None, :], act_lead)
+        h = h.reshape(H, W, -1)
+    else:
+        h = x.astype(jnp.float32)
+    # SAME pad for the 3x3/stride window (XLA's lo=total//2 split)
+    ph = max((Ho - 1) * stride + 3 - H, 0)
+    pw = max((Wo - 1) * stride + 3 - W, 0)
+    hp = jnp.pad(h, ((ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2),
+                     (0, 0)))
     dww = dww_ref[...]
-    acc = jnp.zeros((H, W, xp.shape[-1]), jnp.float32)
+    acc = jnp.zeros((Ho, Wo, hp.shape[-1]), jnp.float32)
     for dy in range(3):
         for dx in range(3):
-            acc += xp[dy:dy + H, dx:dx + W, :].astype(jnp.float32) \
-                * dww[dy, dx][None, None, :]
-    h = jnp.clip(acc + dwb_ref[...][None, None, :], 0.0, 6.0)
-    # pointwise: (H*W, C) @ (C, Co) on the MXU, fp32 accumulation
-    hw = h.reshape(H * W, -1).astype(xp.dtype)
+            sl = hp[dy:dy + (Ho - 1) * stride + 1:stride,
+                    dx:dx + (Wo - 1) * stride + 1:stride, :]
+            acc += sl * dww[dy, dx][None, None, :]
+    h2 = _act(acc + dwb_ref[...][None, None, :], act_dw)
+    # pointwise: (Ho*Wo, C) @ (C, Co) on the MXU, fp32 accumulation
+    hw = h2.reshape(Ho * Wo, -1).astype(x.dtype)
     out = jnp.dot(hw, pww_ref[...], preferred_element_type=jnp.float32)
     out = out + pwb_ref[...][None, :]
-    out_ref[0] = out.reshape(H, W, -1).astype(out_ref.dtype)
+    out_ref[0] = out.reshape(Ho, Wo, -1).astype(out_ref.dtype)
+
+
+def fused_chain_pallas(x, lead_w, lead_b, dw_w, dw_b, pw_w, pw_b, *,
+                       stride: int = 1, act_lead: str = "none",
+                       act_dw: str = "relu6", interpret=False):
+    """x (B,H,W,C) -> (B,Ho,Wo,Co); intermediates stay in VMEM.
+
+    ``lead_w``/``lead_b`` may be None (plain dw+pw pair)."""
+    B, H, W, C = x.shape
+    Ho, Wo = -(-H // stride), -(-W // stride)
+    Cm = dw_w.shape[-1]
+    Co = pw_w.shape[-1]
+    has_lead = lead_w is not None
+    kernel = functools.partial(
+        lambda *refs, **kw: _chain_kernel(refs, **kw),
+        has_lead=has_lead, stride=stride, act_lead=act_lead, act_dw=act_dw)
+    in_specs = [pl.BlockSpec((1, H, W, C), lambda b: (b, 0, 0, 0))]
+    args = [x]
+    if has_lead:
+        in_specs += [pl.BlockSpec((C, Cm), lambda b: (0, 0)),
+                     pl.BlockSpec((Cm,), lambda b: (0,))]
+        args += [lead_w, lead_b]
+    in_specs += [
+        pl.BlockSpec((3, 3, Cm), lambda b: (0, 0, 0)),
+        pl.BlockSpec((Cm,), lambda b: (0,)),
+        pl.BlockSpec((Cm, Co), lambda b: (0, 0)),
+        pl.BlockSpec((Co,), lambda b: (0,)),
+    ]
+    args += [dw_w, dw_b, pw_w, pw_b]
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, Ho, Wo, Co), lambda b: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Ho, Wo, Co), x.dtype),
+        interpret=interpret,
+    )(*args)
 
 
 def fused_dw_pw_pallas(x, dw_w, dw_b, pw_w, pw_b, *, interpret=False):
-    """x (B,H,W,C) -> (B,H,W,Co); intermediates stay in VMEM."""
-    B, H, W, C = x.shape
-    Co = pw_w.shape[-1]
-    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
-    return pl.pallas_call(
-        _kernel,
-        grid=(B,),
-        in_specs=[
-            pl.BlockSpec((1, H + 2, W + 2, C), lambda b: (b, 0, 0, 0)),
-            pl.BlockSpec((3, 3, C), lambda b: (0, 0, 0)),
-            pl.BlockSpec((C,), lambda b: (0,)),
-            pl.BlockSpec((C, Co), lambda b: (0, 0)),
-            pl.BlockSpec((Co,), lambda b: (0,)),
-        ],
-        out_specs=pl.BlockSpec((1, H, W, Co), lambda b: (b, 0, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, H, W, Co), x.dtype),
-        interpret=interpret,
-    )(xp, dw_w, dw_b, pw_w, pw_b)
+    """Back-compat wrapper: the original dw3x3(relu6)+pw1x1 pair."""
+    return fused_chain_pallas(x, None, None, dw_w, dw_b, pw_w, pw_b,
+                              stride=1, act_dw="relu6", interpret=interpret)

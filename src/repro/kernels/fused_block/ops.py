@@ -1,11 +1,19 @@
-"""jit'd public wrapper for the fused bottleneck-tail kernel."""
+"""jit'd public wrappers for the fused FPGA-chain kernels.
+
+``fused_chain`` is the generalized entry the backend-lowering pass uses:
+optional leading pw1x1, dw3x3 at stride 1/2, trailing pw1x1 — activations
+between stages are static kernel parameters.  ``fused_block`` keeps the
+original dw3x3(relu6)+pw1x1 pair API.
+"""
 from __future__ import annotations
 
 from functools import partial
 
 import jax
 
-from repro.kernels.fused_block.kernel import fused_dw_pw_pallas
+from repro.kernels.fused_block.kernel import (fused_chain_pallas,
+                                              fused_dw_pw_pallas)
+from repro.kernels.fused_block.ref import fused_chain as fused_chain_ref
 from repro.kernels.fused_block.ref import fused_dw_pw
 
 
@@ -19,3 +27,19 @@ def fused_block(x, dw_w, dw_b, pw_w, pw_b, use_pallas: bool = True):
         return fused_dw_pw(x, dw_w, dw_b, pw_w, pw_b)
     return fused_dw_pw_pallas(x, dw_w, dw_b, pw_w, pw_b,
                               interpret=_on_cpu())
+
+
+@partial(jax.jit, static_argnames=("stride", "act_lead", "act_dw",
+                                   "use_pallas"))
+def fused_chain(x, lead_w, lead_b, dw_w, dw_b, pw_w, pw_b, *,
+                stride: int = 1, act_lead: str = "none",
+                act_dw: str = "relu6", use_pallas: bool = True):
+    """[pw1x1+act_lead] -> dw3x3/stride+act_dw -> pw1x1 (trailing act is
+    the caller's).  ``lead_w``/``lead_b`` None = plain dw+pw pair."""
+    if not use_pallas:
+        return fused_chain_ref(x, lead_w, lead_b, dw_w, dw_b, pw_w, pw_b,
+                               stride=stride, act_lead=act_lead,
+                               act_dw=act_dw)
+    return fused_chain_pallas(x, lead_w, lead_b, dw_w, dw_b, pw_w, pw_b,
+                              stride=stride, act_lead=act_lead,
+                              act_dw=act_dw, interpret=_on_cpu())

@@ -1,15 +1,45 @@
-"""Pure-jnp oracle for the fused dw3x3 + pw1x1 bottleneck tail."""
+"""Pure-jnp oracles for the fused FPGA-chain kernels.
+
+``fused_dw_pw`` is the original dw3x3(relu6)+pw1x1 pair oracle; the
+generalized ``fused_chain`` covers every chain shape the fusion pass emits:
+an optional leading pw1x1 (with its own activation), a dw3x3 at stride 1 or
+2 (activation none/relu/relu6), and a trailing pw1x1 whose activation the
+caller applies.
+"""
 import jax
 import jax.numpy as jnp
 
 
+def _act(x, kind: str):
+    if kind == "relu":
+        return jax.nn.relu(x)
+    if kind == "relu6":
+        return jnp.clip(x, 0.0, 6.0)
+    return x
+
+
 def fused_dw_pw(x, dw_w, dw_b, pw_w, pw_b):
     """x (B,H,W,C); dw_w (3,3,C); pw_w (C,Co).  relu6 between stages."""
+    return fused_chain(x, None, None, dw_w, dw_b, pw_w, pw_b,
+                       stride=1, act_lead="none", act_dw="relu6")
+
+
+def fused_chain(x, lead_w, lead_b, dw_w, dw_b, pw_w, pw_b, *,
+                stride: int = 1, act_lead: str = "none",
+                act_dw: str = "relu6"):
+    """[pw1x1+act_lead] -> dw3x3/stride+act_dw -> pw1x1 (no trailing act).
+
+    x (B,H,W,C); lead_w (C,Cm) or None; dw_w (3,3,Cm); pw_w (Cm,Co).
+    """
+    if lead_w is not None:
+        x = _act(jnp.einsum("bhwc,co->bhwo", x, lead_w,
+                            preferred_element_type=jnp.float32)
+                 + lead_b, act_lead).astype(x.dtype)
     y = jax.lax.conv_general_dilated(
-        x, dw_w[..., None, :], (1, 1), "SAME",
+        x, dw_w[..., None, :], (stride, stride), "SAME",
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
         feature_group_count=x.shape[-1])
-    y = jnp.clip(y + dw_b, 0.0, 6.0)
+    y = _act(y + dw_b, act_dw)
     out = jnp.einsum("bhwc,co->bhwo", y, pw_w,
                      preferred_element_type=jnp.float32)
     return (out + pw_b).astype(x.dtype)

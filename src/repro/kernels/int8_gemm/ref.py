@@ -9,7 +9,6 @@ the platform's optimized fp32 kernels instead of XLA:CPU's scalar s8 dot.
 K is split into <=1024-wide chunks whose exact fp32 partials are combined
 in int32, extending exactness to arbitrary K.
 """
-import jax
 import jax.numpy as jnp
 
 # 1024 * 127 * 127 = 16.5M < 2^24: any partial sum within a chunk is exact

@@ -6,8 +6,6 @@ from ``jax.eval_shape``.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding
@@ -15,7 +13,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeSpec
 from repro.models.lm import model as lm
-from repro.models.lm.sharding import AxisRules, specs_from_axes, use_rules
+from repro.models.lm.sharding import AxisRules, use_rules
 from repro.optim import make_optimizer
 from repro.train.steps import (TrainState, make_decode_fn, make_prefill_fn,
                                make_train_step)

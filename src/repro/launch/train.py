@@ -14,11 +14,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import SHAPES, get_config, reduced
+from repro.configs import get_config, reduced
 from repro.checkpoint import CheckpointManager
 from repro.data import synthetic_batches
 from repro.launch.mesh import make_host_mesh, make_production_mesh
-from repro.launch.specs import shardings_of
 from repro.models.lm import model as lm
 from repro.models.lm.sharding import AxisRules, use_rules
 from repro.optim import make_optimizer

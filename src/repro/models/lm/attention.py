@@ -18,8 +18,6 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.models.lm.sharding import lc
-
 NEG_INF = -1e30
 
 

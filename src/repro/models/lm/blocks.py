@@ -15,7 +15,7 @@ mode ("train"|"decode"), per-layer cache slice, encoder output, and returns
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

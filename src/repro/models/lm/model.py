@@ -12,7 +12,6 @@ carry a leading n_units axis.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.models.lm.common import Schema, prefix_schema
+from repro.models.lm.common import Schema
 
 
 # ---------------------------------------------------------------------------

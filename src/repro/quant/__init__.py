@@ -29,6 +29,25 @@ def dequantize(q, scale):
     return q.astype(jnp.float32) * scale
 
 
+def scale_from_amax(amax, bits: int = 8):
+    """Frozen-scale calibration: amax (max |activation| over a calibration
+    batch) -> per-tensor scale on the same int grid ``quantize`` uses."""
+    qmax = 2.0 ** (bits - 1) - 1
+    return jnp.maximum(jnp.asarray(amax, jnp.float32), 1e-8) / qmax
+
+
+def quantize_with_scale(x, scale, bits: int = 8):
+    """int8-quantize with a FROZEN scale (no runtime amax reduction)."""
+    qmax = 2.0 ** (bits - 1) - 1
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax, qmax)
+    return q.astype(jnp.int8)
+
+
+def fake_quant_with_scale(x, scale, bits: int = 8):
+    q = quantize_with_scale(x, scale, bits)
+    return (q.astype(jnp.float32) * scale).astype(x.dtype)
+
+
 def fake_quant(x, axis=None, bits: int = 8):
     q, s = quantize(x, axis, bits)
     return dequantize(q, s).astype(x.dtype)

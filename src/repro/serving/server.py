@@ -41,7 +41,7 @@ class _Entry:
     """One registered network: engine + prepared params + bucket policy."""
 
     def __init__(self, name, mods, plans, params, input_hw, buckets,
-                 use_pallas):
+                 use_pallas, calib_x=None):
         self.name = name
         self.mods = mods
         self.plans = plans
@@ -49,8 +49,13 @@ class _Entry:
         self.input_hw = tuple(input_hw)
         self.buckets = tuple(sorted(buckets))
         self.use_pallas = use_pallas
+        self.calib_x = calib_x
         self.engine = compile_network(mods, plans, use_pallas=use_pallas)
-        self.prepared = self.engine.prepare(params)
+        if self.engine.needs_calibration and calib_x is None:
+            raise ValueError(
+                f"{name}: plans request calibration (Plan.calibrate=True) "
+                f"— register(..., calib_x=batch) is required")
+        self.prepared = self.engine.prepare(params, calib_x)
         self.c_in = mods[0].nodes[0].spec.c_in
 
     def input_shape(self, batch: int) -> tuple:
@@ -61,10 +66,11 @@ class _Entry:
             self.prepared, [self.input_shape(b) for b in self.buckets])
 
     def refresh(self):
-        """Re-acquire the engine after an executor cache clear."""
+        """Re-acquire the engine after an executor cache clear (re-running
+        calibration from the stored batch when the plans need it)."""
         self.engine = compile_network(self.mods, self.plans,
                                       use_pallas=self.use_pallas)
-        self.prepared = self.engine.prepare(self.params)
+        self.prepared = self.engine.prepare(self.params, self.calib_x)
         self.warmup()
 
 
@@ -88,18 +94,24 @@ class HeteroServer:
 
     def register(self, name: str, mods, plans=None, params=None, *,
                  input_hw=(96, 96), buckets=None, warm: bool = True,
-                 use_pallas: bool | None = None) -> dict:
+                 use_pallas: bool | None = None, calib_x=None) -> dict:
         """Compile, prepare and bucket-warm a network under ``name``.
 
         ``buckets`` overrides the server-wide bucket ladder (per-network
-        policy: e.g. cap a cache-thrashing workload at batch 8).  Returns
-        the engine's exec stats after warm-up (one trace per bucket)."""
+        policy: e.g. cap a cache-thrashing workload at batch 8).
+        ``calib_x`` is the calibration batch for plans that freeze
+        activation scales at prepare time (``Plan.calibrate``) — required
+        for such plans, ignored otherwise.  Calibrated and uncalibrated
+        plans carry different plan signatures, so mixed registrations
+        never share an engine.  Returns the engine's exec stats after
+        warm-up (one trace per bucket)."""
         if params is None:
             params = init_network(mods, jax.random.PRNGKey(0))
         if use_pallas is None:
             use_pallas = self.use_pallas    # server-wide default
         entry = _Entry(name, mods, plans, params,
-                       input_hw, buckets or self.buckets, use_pallas)
+                       input_hw, buckets or self.buckets, use_pallas,
+                       calib_x=calib_x)
         with self._lock:
             self._entries[name] = entry
             self._caps[name] = entry.buckets

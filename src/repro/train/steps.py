@@ -9,7 +9,7 @@ by launcher flags) — the paper's `max(compute, comm)` overlap at DC scale.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

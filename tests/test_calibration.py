@@ -1,0 +1,131 @@
+"""Prepare-time calibration: frozen activation scales, plan-signature
+separation, serving integration."""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.executor import compile_network, plan_signature
+from repro.core.graph import NETWORKS
+from repro.core.hetero import init_network, run_network
+from repro.core.partitioner import partition_network
+from repro.serving import HeteroServer
+
+
+def _setup(net="mobilenetv2", res=32):
+    mods = NETWORKS[net]()
+    plans = partition_network(mods, paper_faithful=True)
+    cplans = [replace(p, calibrate=True) for p in plans]
+    params = init_network(mods, jax.random.PRNGKey(0))
+    calib = 0.5 * jax.random.normal(jax.random.PRNGKey(2), (4, res, res, 3))
+    return mods, plans, cplans, params, calib
+
+
+def test_prepare_without_calib_batch_raises():
+    mods, _plans, cplans, params, _calib = _setup()
+    eng = compile_network(mods, cplans, use_pallas=False)
+    assert eng.needs_calibration
+    with pytest.raises(ValueError, match="calibration batch"):
+        eng.prepare(params)
+
+
+def test_uncalibrated_plans_ignore_calib_batch():
+    mods, plans, _cplans, params, calib = _setup()
+    eng = compile_network(mods, plans, use_pallas=False)
+    assert not eng.needs_calibration
+    p1 = eng.prepare(params)
+    p2 = eng.prepare(params, calib)          # accepted, no-op
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(3), (2, 32, 32, 3))
+    assert (eng(p1, x) == eng(p2, x)).all()
+
+
+@pytest.mark.parametrize("net", list(NETWORKS))
+def test_frozen_scales_stable_and_batch_invariant(net):
+    """Calibrated plans produce bit-identical outputs across calls, and a
+    row's logits never depend on its batch-mates (frozen scales are
+    constants — the serving contract holds trivially)."""
+    mods, _plans, cplans, params, calib = _setup(net)
+    eng = compile_network(mods, cplans, use_pallas=False)
+    prep = eng.prepare(params, calib)
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(3), (4, 32, 32, 3))
+    out1 = eng(prep, x)
+    out2 = eng(prep, x)
+    assert (out1 == out2).all()
+    for i in range(x.shape[0]):
+        row = eng(prep, x[i:i + 1])
+        assert (row[0] == out1[i]).all(), f"{net}: row {i} not invariant"
+
+
+def test_calibrated_close_to_interpreted_oracle():
+    mods, plans, cplans, params, calib = _setup()
+    eng = compile_network(mods, cplans, use_pallas=False)
+    prep = eng.prepare(params, calib)
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(3), (2, 32, 32, 3))
+    out = eng(prep, x)
+    ref = run_network(mods, params, x, plans)
+    cos = float(jnp.sum(out * ref)
+                / (jnp.linalg.norm(out) * jnp.linalg.norm(ref)))
+    assert cos > 0.995
+
+
+def test_signature_separates_calibrated_plans():
+    mods, plans, cplans, params, calib = _setup()
+    assert plan_signature(mods, plans, False) \
+        != plan_signature(mods, cplans, False)
+    e_u = compile_network(mods, plans, use_pallas=False)
+    e_c = compile_network(mods, cplans, use_pallas=False)
+    assert e_u is not e_c
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(3), (2, 32, 32, 3))
+    out_u = e_u(e_u.prepare(params), x)
+    out_c = e_c(e_c.prepare(params, calib), x)
+    # different quantization grids -> different (but close) numerics
+    assert not bool((out_u == out_c).all())
+    cos = float(jnp.sum(out_u * out_c)
+                / (jnp.linalg.norm(out_u) * jnp.linalg.norm(out_c)))
+    assert cos > 0.995
+
+
+def test_gpu_only_plans_never_need_calibration():
+    mods = NETWORKS["squeezenet"]()
+    plans = [replace(p, calibrate=True)
+             for p in partition_network(mods, objective="gpu_only")]
+    eng = compile_network(mods, plans, use_pallas=False)
+    assert not eng.needs_calibration    # no FPGA quant sites to freeze
+
+
+# --- serving ---------------------------------------------------------------
+
+def test_serving_rejects_calibrated_plans_without_batch():
+    mods, _plans, cplans, params, _calib = _setup("shufflenetv2")
+    server = HeteroServer(buckets=(1, 4))
+    with pytest.raises(ValueError, match="calib_x"):
+        server.register("cal", mods, cplans, params, input_hw=(32, 32))
+
+
+def test_serving_mixed_calibrated_uncalibrated_isolated():
+    """Calibrated and uncalibrated registrations of the SAME network get
+    distinct engines (distinct signatures) and each serves rows that
+    bit-match its own direct batch-1 calls."""
+    mods, plans, cplans, params, calib = _setup("shufflenetv2")
+    server = HeteroServer(buckets=(1, 4), max_wait_ms=1.0)
+    server.register("cal", mods, cplans, params, input_hw=(32, 32),
+                    calib_x=calib)
+    server.register("uncal", mods, plans, params, input_hw=(32, 32))
+    e_c = compile_network(mods, cplans)
+    e_u = compile_network(mods, plans)
+    assert e_c is not e_u
+    prep_c = e_c.prepare(params, calib)
+    prep_u = e_u.prepare(params)
+    imgs = [jax.random.normal(jax.random.PRNGKey(i), (32, 32, 3))
+            for i in range(5)]
+    with server:
+        fc = [server.submit("cal", x) for x in imgs]
+        fu = [server.submit("uncal", x) for x in imgs]
+        rows_c = [f.result(120) for f in fc]
+        rows_u = [f.result(120) for f in fu]
+    for x, rc, ru in zip(imgs, rows_c, rows_u):
+        xb = np.asarray(x)[None]
+        assert (np.asarray(e_c(prep_c, xb))[0] == rc).all()
+        assert (np.asarray(e_u(prep_u, xb))[0] == ru).all()

@@ -3,8 +3,6 @@ hetero-partitioned CNN pipeline works as one system."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-
 from repro.configs import get_config, reduced
 from repro.core.graph import NETWORKS
 from repro.core.hetero import init_network, run_network

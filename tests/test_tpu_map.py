@@ -2,7 +2,7 @@
 import pytest
 
 from repro.core.graph import NETWORKS
-from repro.core.tpu_map import plan_network, summarize, vmem_usage
+from repro.core.tpu_map import plan_network, summarize
 
 
 @pytest.mark.parametrize("net", list(NETWORKS))
