@@ -16,6 +16,11 @@ values are themselves conservative floors below locally measured numbers
 (see ``note`` in the file), so the guard trips on structural regressions,
 not host jitter.  A metric missing from the fresh run also fails —
 silently dropping a benchmark must not pass the guard.
+
+Besides the threshold-derated ``metrics``, the baseline may pin absolute
+``floors`` — invariants checked without derating: multi-in-flight serving
+must not fall below the single-in-flight loop (speedup >= 1) and served
+rows must bit-match batch-1 monolithic calls (bitmatch == 1).
 """
 from __future__ import annotations
 
@@ -28,9 +33,14 @@ def check(current: dict, baseline: dict, threshold: float) -> list[str]:
     failures = []
     cur = current.get("metrics", {})
     print(f"{'metric':56s} {'base':>10s} {'now':>10s} {'floor':>10s}  ok")
-    for name in sorted(baseline.get("metrics", {})):
-        base = baseline["metrics"][name]
-        floor = base * (1.0 - threshold)
+    # "metrics": threshold-derated throughput guards (host jitter allowed);
+    # "floors": absolute invariants — e.g. pipelined serving >= the
+    # single-in-flight loop, served rows bit-matching — no derating.
+    pinned = [(name, base, base * (1.0 - threshold))
+              for name, base in baseline.get("metrics", {}).items()]
+    pinned += [(name, floor, floor)
+               for name, floor in baseline.get("floors", {}).items()]
+    for name, base, floor in sorted(pinned):
         have = cur.get(name)
         if have is None:
             print(f"{name:56s} {base:10.3f} {'MISSING':>10s} {floor:10.3f}  "
@@ -42,7 +52,7 @@ def check(current: dict, baseline: dict, threshold: float) -> list[str]:
               f"{'ok' if ok else 'FAIL'}")
         if not ok:
             failures.append(f"{name}: {have:.3f} < floor {floor:.3f} "
-                            f"(baseline {base:.3f}, -{threshold:.0%})")
+                            f"(baseline {base:.3f})")
     return failures
 
 
@@ -64,9 +74,10 @@ def main(argv=None) -> int:
         for msg in failures:
             print(f"  - {msg}", file=sys.stderr)
         return 1
-    n = len(baseline.get("metrics", {}))
+    n = (len(baseline.get("metrics", {}))
+         + len(baseline.get("floors", {})))
     print(f"\nregression guard passed: {n} metrics within "
-          f"{args.threshold:.0%} of baseline")
+          f"{args.threshold:.0%} of baseline (absolute floors exact)")
     return 0
 
 

@@ -23,9 +23,13 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--res", type=int, default=96)
     ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--in-flight", type=int, default=2,
+                    help="dispatch depth: batches in flight without a "
+                         "host block (1 = fully serialized drain loop)")
     args = ap.parse_args()
 
-    server = HeteroServer(buckets=(1, 4, 8, 32), max_wait_ms=2.0)
+    server = HeteroServer(buckets=(1, 4, 8, 32), max_wait_ms=2.0,
+                          in_flight=args.in_flight)
     engines = {}
     for net, builder in NETWORKS.items():
         mods = builder()
@@ -65,7 +69,8 @@ def main():
     print("\nper-engine exec stats:")
     for name, e in server.stats()["engines"].items():
         print(f"  {name:13s} calls={e['calls']:3d} traces={e['traces']} "
-              f"buckets={e['buckets']}")
+              f"buckets={e['buckets']} "
+              f"donated={e['donated_bytes'] // 1024}kB")
 
 
 if __name__ == "__main__":

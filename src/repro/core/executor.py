@@ -14,6 +14,11 @@ API::
                                                  # weights -> resident int8
     logits   = engine(prepared, x)               # single jitted call
 
+    pipe = compile_pipelined(mods, plans)        # stage-pipelined variant:
+    logits = pipe(prepared, x)                   #  same bits, cut at every
+    outs = pipe.run_many(prepared, xs, depth=4)  #  FPGA<->GPU boundary so
+                                                 #  micro-batches overlap
+
 Plans that opted into prepare-time calibration (``Plan.calibrate``) freeze
 their activation scales from a calibration batch::
 
@@ -46,6 +51,8 @@ parity-tested against (``tests/test_executor.py``).
 from __future__ import annotations
 
 import threading
+import warnings
+from contextlib import contextmanager, nullcontext
 from dataclasses import astuple
 
 import jax
@@ -59,6 +66,19 @@ from repro.core.schedule import Plan
 
 def _default_use_pallas() -> bool:
     return jax.default_backend() != "cpu"
+
+
+@contextmanager
+def _quiet_donation():
+    """Scope-limited filter for jax's trace-time "donated buffers were not
+    usable" warning: donation is best-effort by design here — buffers whose
+    shape matches no computation output simply are not reused, which is not
+    actionable for callers.  Applied only around first-trace dispatches so
+    steady-state calls pay no filter-manipulation cost."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        yield
 
 
 def plan_signature(mods: list[ModuleGraph], plans: list[Plan] | None,
@@ -78,7 +98,7 @@ def plan_signature(mods: list[ModuleGraph], plans: list[Plan] | None,
                               for g in chain_groups(m, p) if len(g) > 1)
             psig = (p.scheme, tuple(sorted(p.assign.items())),
                     tuple(p.fused), tuple(sorted(p.gconv.items())),
-                    fused_sig, bool(p.calibrate))
+                    fused_sig, p.calibrator)
         else:
             psig = None
         sig.append((m.name, m.kind, m.output, m.residual,
@@ -107,8 +127,14 @@ class CompiledNetwork:
         self._prepare_fn = lowered.prepare      # jits its own internals
         self.needs_calibration = lowered.needs_calibration
         self._jitted = jax.jit(lowered.run)
+        # donating variant of the same program: the caller hands over the
+        # input-batch buffer and XLA reuses it instead of allocating (one
+        # copy saved per call on the serving hot path, where the padded
+        # batch is drain-loop-owned and never read again)
+        self._jitted_donate = jax.jit(lowered.run, donate_argnums=(1,))
         self._shapes_seen: set = set()
-        self._exec = {"calls": 0, "traces": 0}
+        self._exec = {"calls": 0, "traces": 0,
+                      "donated_calls": 0, "donated_bytes": 0}
         # cached engines are shared across threads (serving drain loop +
         # direct callers); keep the accounting race-free
         self._stats_lock = threading.Lock()
@@ -120,20 +146,38 @@ class CompiledNetwork:
         batch is required and activation scales are frozen from it."""
         return self._prepare_fn(params, calib_x)
 
-    def __call__(self, prepared, x):
-        key = (tuple(x.shape), str(getattr(x, "dtype", "f32")))
+    def _count_call(self, x, donate: bool) -> None:
+        key = (tuple(x.shape), str(getattr(x, "dtype", "f32")), donate)
+        nbytes = int(getattr(x, "nbytes", 0))
         with self._stats_lock:
             if key not in self._shapes_seen:
                 self._shapes_seen.add(key)
                 self._exec["traces"] += 1
             self._exec["calls"] += 1
-        return self._jitted(prepared, x)
+            if donate:
+                self._exec["donated_calls"] += 1
+                self._exec["donated_bytes"] += nbytes
 
-    def warmup(self, prepared, shapes) -> dict:
+    def __call__(self, prepared, x, *, donate: bool = False):
+        """Run the jitted program.  ``donate=True`` donates ``x``'s buffer
+        to the computation — the CALLER'S array becomes unusable after the
+        call; only pass buffers you own and will not read again."""
+        first = ((tuple(x.shape), str(getattr(x, "dtype", "f32")), donate)
+                 not in self._shapes_seen)
+        self._count_call(x, donate)
+        with _quiet_donation() if (first and donate) else nullcontext():
+            if donate:
+                return self._jitted_donate(prepared, x)
+            return self._jitted(prepared, x)
+
+    def warmup(self, prepared, shapes, *, donate: bool = False) -> dict:
         """Trace/compile each input shape once on zeros (per-bucket compile
-        warm-up for the serving path).  Returns ``exec_stats()``."""
+        warm-up for the serving path; ``donate`` must match how the live
+        path will call — the two variants trace separately).  Returns
+        ``exec_stats()``."""
         for s in shapes:
-            jax.block_until_ready(self(prepared, jnp.zeros(s, jnp.float32)))
+            jax.block_until_ready(
+                self(prepared, jnp.zeros(s, jnp.float32), donate=donate))
         return self.exec_stats()
 
     def exec_stats(self) -> dict:
@@ -144,6 +188,153 @@ class CompiledNetwork:
         """False once ``clear_cache`` ran after this engine was built —
         a serving layer holding the instance should re-``compile_network``
         (the engine itself keeps working; this only flags staleness)."""
+        return self.generation == _GENERATION[0]
+
+
+class PipelinedEngine:
+    """The same (modules, plans) pair, compiled as a STAGE PIPELINE.
+
+    ``repro.core.passes.stage`` cuts the lowered network at every FPGA<->GPU
+    boundary into maximal same-device segments; each segment jits separately
+    and the engine threads a dict of live inter-stage values through them.
+    Running the stages back to back is bit-identical to the monolithic
+    ``CompiledNetwork`` (the parity oracle — ``tests/test_pipeline.py``),
+    but the cut exposes the paper's overlap: with JAX's async dispatch,
+    stage s of micro-batch i runs while stage s+1 still works on
+    micro-batch i-1 (``run_many``), the software analogue of the FPGA
+    front-end computing input i+1 under the GPU back-end of input i.
+
+    Inter-stage envs are engine-owned, so every stage after the first
+    donates its env (``donate_argnums``) — device hand-offs reuse buffers
+    instead of copying.  The network input rides a separate, never-donated
+    argument, so caller arrays are never consumed.
+    """
+
+    def __init__(self, mods: list[ModuleGraph], plans: list[Plan] | None,
+                 use_pallas: bool):
+        self.signature = ("pipelined",) + plan_signature(mods, plans,
+                                                         use_pallas)
+        self.use_pallas = use_pallas
+        self.generation = _GENERATION[0]
+        lowered = lower_network(mods, plans, use_pallas)
+        self._prepare_fn = lowered.prepare
+        self.needs_calibration = lowered.needs_calibration
+        self.stages = lowered.stages
+        self._jitted = [
+            jax.jit(s.fn) if i == 0 else jax.jit(s.fn, donate_argnums=(2,))
+            for i, s in enumerate(self.stages)]
+        self._shapes_seen: set = set()
+        self._env_bytes: dict[tuple, int] = {}   # per input shape, at trace
+        self._exec = {"calls": 0, "traces": 0, "stages": len(self.stages),
+                      "donated_calls": 0, "donated_bytes": 0}
+        self._stats_lock = threading.Lock()
+
+    def prepare(self, params, calib_x=None) -> dict:
+        return self._prepare_fn(params, calib_x)
+
+    def _slices(self, prepared) -> list:
+        """Per-stage prepared-parameter slices (tiny host-side dicts; each
+        stage's jit signature only carries the weights it actually uses)."""
+        return [{f"{m}.{p}": prepared[m][p] for m, p in s.params}
+                for s in self.stages]
+
+    def _dispatch(self, slices, x, env, s: int):
+        stage = self.stages[s]
+        xin = x if stage.needs_input else ()
+        return self._jitted[s](slices[s], xin, env)
+
+    def _count_call(self, x, donated_env_bytes: int) -> None:
+        key = (tuple(x.shape), str(getattr(x, "dtype", "f32")))
+        with self._stats_lock:
+            if key not in self._shapes_seen:
+                self._shapes_seen.add(key)
+                self._exec["traces"] += 1
+            self._exec["calls"] += 1
+            if len(self.stages) > 1:
+                self._exec["donated_calls"] += 1
+                self._exec["donated_bytes"] += donated_env_bytes
+
+    def _env_nbytes(self, x, envs) -> int:
+        """Bytes handed over by donation in one full stage sweep — computed
+        once per input shape (the env shapes are a function of it)."""
+        key = tuple(x.shape)
+        if key not in self._env_bytes:
+            self._env_bytes[key] = sum(
+                int(v.nbytes) for env in envs for v in env.values())
+        return self._env_bytes[key]
+
+    def __call__(self, prepared, x, *, donate: bool = False):
+        """Single-batch forward through the stage list.  Async dispatch:
+        returns as soon as the last stage is enqueued.  ``donate`` is
+        accepted for interface parity with ``CompiledNetwork`` — the
+        caller's ``x`` is never consumed either way (inter-stage donation
+        is always on)."""
+        first = ((tuple(x.shape), str(getattr(x, "dtype", "f32")))
+                 not in self._shapes_seen)
+        slices = self._slices(prepared)
+        env: dict = {}
+        envs = []
+        with _quiet_donation() if first else nullcontext():
+            for s in range(len(self.stages)):
+                env = self._dispatch(slices, x, env, s)
+                if s + 1 < len(self.stages):
+                    envs.append(env)
+        self._count_call(x, self._env_nbytes(x, envs))
+        return env["__out"]
+
+    def run_many(self, prepared, xs, *, depth: int = 2) -> list:
+        """Micro-batch software pipeline with at most ``depth`` batches in
+        flight: each round advances every active batch one stage (oldest
+        first, so stage s of batch i dispatches right after stage s+1 of
+        batch i-1 — the skewed schedule), starts a new batch only while
+        fewer than ``depth`` are active, and otherwise host-blocks to
+        retire the oldest.  The window bounds live inter-stage envs — the
+        memory cap ``depth`` promises — during fill as well as steady
+        state.  Results are ordered and bit-identical to per-batch
+        ``__call__``."""
+        depth = max(1, int(depth))
+        n, n_stages = len(xs), len(self.stages)
+        if n and ((tuple(xs[0].shape), str(getattr(xs[0], "dtype", "f32")))
+                  not in self._shapes_seen):
+            # trace every stage on the first micro-batch before pipelining
+            # (keeps donation warnings scoped and the pipeline trace-free)
+            jax.block_until_ready(self(prepared, xs[0]))
+        slices = self._slices(prepared) if n else []
+        envs: list = [None] * n
+        outs: list = [None] * n
+        stage_of = [0] * n             # next stage to dispatch per batch
+        started = retired = 0
+        while retired < n:
+            for i in range(retired, started):
+                s = stage_of[i]
+                if s >= n_stages:
+                    continue           # fully dispatched, awaiting retire
+                env = self._dispatch(slices, xs[i], envs[i] or {}, s)
+                stage_of[i] = s + 1
+                if s == n_stages - 1:
+                    outs[i] = env["__out"]
+                    envs[i] = None
+                    self._count_call(xs[i], 0)
+                else:
+                    envs[i] = env
+            if started < n and started - retired < depth:
+                started += 1           # admitted; advances next round
+            elif outs[retired] is not None:
+                jax.block_until_ready(outs[retired])
+                retired += 1
+        return outs
+
+    def warmup(self, prepared, shapes, *, donate: bool = False) -> dict:
+        for s in shapes:
+            jax.block_until_ready(
+                self(prepared, jnp.zeros(s, jnp.float32), donate=donate))
+        return self.exec_stats()
+
+    def exec_stats(self) -> dict:
+        with self._stats_lock:
+            return dict(self._exec)
+
+    def is_current(self) -> bool:
         return self.generation == _GENERATION[0]
 
 
@@ -165,6 +356,27 @@ def compile_network(mods: list[ModuleGraph], plans: list[Plan] | None = None,
         return _CACHE[sig]
     _STATS["misses"] += 1
     eng = CompiledNetwork(mods, plans, use_pallas)
+    if cache:
+        _CACHE[sig] = eng
+    return eng
+
+
+def compile_pipelined(mods: list[ModuleGraph],
+                      plans: list[Plan] | None = None, *,
+                      use_pallas: bool | None = None,
+                      cache: bool = True) -> PipelinedEngine:
+    """Compile (or fetch from cache) the stage-pipelined engine for this
+    (modules, plans) pair.  Pipelined and monolithic engines share the
+    executor cache but never alias (distinct signature tags): they are
+    different programs with identical numerics."""
+    if use_pallas is None:
+        use_pallas = _default_use_pallas()
+    sig = ("pipelined",) + plan_signature(mods, plans, use_pallas)
+    if cache and sig in _CACHE:
+        _STATS["hits"] += 1
+        return _CACHE[sig]
+    _STATS["misses"] += 1
+    eng = PipelinedEngine(mods, plans, use_pallas)
     if cache:
         _CACHE[sig] = eng
     return eng

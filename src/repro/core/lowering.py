@@ -25,7 +25,7 @@ from typing import Callable, NamedTuple
 import jax
 
 from repro.core.graph import ModuleGraph
-from repro.core.passes import run_pipeline
+from repro.core.passes import run_pipeline, stage_partition
 from repro.core.schedule import Plan
 from repro.quant import scale_from_amax
 
@@ -34,6 +34,8 @@ class LoweredNetwork(NamedTuple):
     prepare: Callable        # (params, calib_x=None) -> prepared
     run: Callable            # (prepared, x) -> logits
     needs_calibration: bool
+    stages: list             # passes.Stage list (device-boundary cuts);
+    #                        # running them back to back == run, bit for bit
 
 
 def lower_network(mods: list[ModuleGraph], plans: list[Plan] | None,
@@ -42,6 +44,7 @@ def lower_network(mods: list[ModuleGraph], plans: list[Plan] | None,
     lowered = [(m.name, run_pipeline(m, plan_by.get(m.name), use_pallas))
                for m in mods]
     needs_calibration = any(lm.ir.calib_sites for _name, lm in lowered)
+    stages = stage_partition(lowered)
 
     def prepare_params(params):
         return {name: lm.prepare(params[name]) for name, lm in lowered}
@@ -84,4 +87,4 @@ def lower_network(mods: list[ModuleGraph], plans: list[Plan] | None,
             x = lm.run(prepared[name], x)
         return x.reshape(x.shape[0], -1)
 
-    return LoweredNetwork(prepare, run, needs_calibration)
+    return LoweredNetwork(prepare, run, needs_calibration, stages)

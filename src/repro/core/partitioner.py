@@ -21,7 +21,8 @@ from repro.core.costmodel import Cost, ZERO
 from repro.core.graph import ModuleGraph, Node
 from repro.core.schedule import (Plan, Resources, fpga_chain_cost,
                                  fpga_resources, gpu_cost, module_gpu_only,
-                                 parallel_cost, split_spec_in)
+                                 parallel_cost, pipelined_cost,
+                                 plan_stage_costs, split_spec_in)
 
 ACT_BYTES = 1          # int8 feature maps on the link (paper's 8-bit)
 # channel-parallel slices per mapped layer; high values = full spatial
@@ -291,6 +292,46 @@ def fused_chain_coverage(modules: list[ModuleGraph],
         fused_nodes += sum(len(g) for g in chain_groups(m, p) if len(g) > 1)
     return {"fpga_nodes": fpga_nodes, "fused_nodes": fused_nodes,
             "coverage": fused_nodes / fpga_nodes if fpga_nodes else 0.0}
+
+
+def pipelined_summary(modules: list[ModuleGraph], plans: list[Plan],
+                      n_inflight: int = 8) -> dict:
+    """Price the stage-pipelined schedule of a partitioned network: the
+    same per-node costs as ``summarize``, but stages (maximal same-device
+    runs, merged across module boundaries — the exact cut
+    ``repro.core.passes.stage`` executes) overlap across inputs, so the
+    steady-state beat is the max stage latency rather than the serial sum.
+    This is how the partitioner prices the paper's overlap argument: a
+    balanced FPGA/GPU split can beat a faster-but-lopsided one once k
+    inputs are in flight."""
+    plan_by = {p.module: p for p in plans}
+    merged: list[tuple[str, Cost]] = []     # device-tagged network stages
+    segments = [seg for m in modules
+                for seg in plan_stage_costs(m, plan_by.get(m.name),
+                                            ACT_BYTES)]
+    # the network-level output reshape is a (free) GPU step; include it so
+    # the cut matches the executable stage list exactly
+    segments.append(("gpu", ZERO))
+    for dev, c in segments:
+        if merged and merged[-1][0] == dev:
+            merged[-1] = (dev, merged[-1][1] + c)
+        else:
+            merged.append((dev, c))
+    stages = [c for _d, c in merged]
+    serial = pipelined_cost(stages, 1)             # fill == serial walk
+    piped = pipelined_cost(stages, n_inflight)
+    serial_n = Cost(serial.latency * n_inflight, serial.energy * n_inflight)
+    beat = max(c.latency for c in stages) if stages else 0.0
+    return {
+        "n_stages": len(stages),
+        "n_inflight": n_inflight,
+        "fill_ms": serial.latency * 1e3,
+        "serial_ms_per_input": serial.latency * 1e3,
+        "steady_ms_per_input": beat * 1e3,
+        "pipelined_ms_per_input": piped.latency / max(n_inflight, 1) * 1e3,
+        "pipelined_rps": 1.0 / max(beat, 1e-12),
+        "overlap_speedup": serial_n.latency / max(piped.latency, 1e-12),
+    }
 
 
 def summarize(plans: list[Plan]) -> dict:

@@ -15,9 +15,10 @@ from typing import TYPE_CHECKING
 from repro.core.graph import ModuleGraph
 from repro.core.passes.annotate import annotate_pass
 from repro.core.passes.backend import backend_pass
-from repro.core.passes.calibrate import calibrate_pass
+from repro.core.passes.calibrate import calibrate_pass, calibrator_kind
 from repro.core.passes.fuse import chain_groups, cost_groups, fuse_pass
 from repro.core.passes.ir import Chain, LoweredModule, ModuleIR, NodeAnn
+from repro.core.passes.stage import Stage, stage_partition
 
 if TYPE_CHECKING:
     from repro.core.schedule import Plan
@@ -41,7 +42,8 @@ def run_pipeline(m: ModuleGraph, plan: "Plan | None",
 
 
 __all__ = [
-    "Chain", "LoweredModule", "ModuleIR", "NodeAnn", "PIPELINE",
+    "Chain", "LoweredModule", "ModuleIR", "NodeAnn", "PIPELINE", "Stage",
     "annotate_pass", "backend_pass", "build_ir", "calibrate_pass",
-    "chain_groups", "cost_groups", "fuse_pass", "run_pipeline",
+    "calibrator_kind", "chain_groups", "cost_groups", "fuse_pass",
+    "run_pipeline", "stage_partition",
 ]

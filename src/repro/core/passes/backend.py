@@ -357,11 +357,20 @@ def _lower_pointfree(n: Node):
 # module-level emission
 # --------------------------------------------------------------------------
 
+_SITE_STATS = {
+    # amplitude statistic a calibration capture records per quant site;
+    # scale_from_amax turns either into a frozen per-tensor scale
+    "amax": lambda v: jnp.max(jnp.abs(v)),
+    "pct99": lambda v: jnp.percentile(jnp.abs(v), 99.0),
+}
+
+
 def backend_pass(ir: ModuleIR) -> LoweredModule:
     m = ir.module
     chains_by_head = {c.head: c for c in ir.chains}
     consumed = {nm for c in ir.chains for nm in c.names()[1:]}
     calib = set(ir.calib_sites)
+    site_stat = _SITE_STATS[ir.calibrator]
 
     preps: dict[str, Callable] = {}
     chain_params: dict[str, tuple[str, ...]] = {}
@@ -435,7 +444,7 @@ def backend_pass(ir: ModuleIR) -> LoweredModule:
             v = values[inputs[0]]
             if record is not None and site is not None:
                 probe = v if site[0] == "full" else v[..., :site[1]]
-                record[pname] = jnp.max(jnp.abs(probe))
+                record[pname] = site_stat(probe)
             values[out_name] = fn(prepared_m[pname], v)
         out = values[m.output]
         if m.residual:
@@ -450,4 +459,4 @@ def backend_pass(ir: ModuleIR) -> LoweredModule:
         y = _execute(prepared_m, x, record=record)
         return y, record
 
-    return LoweredModule(ir, prepare, run, capture)
+    return LoweredModule(ir, prepare, run, capture, steps)

@@ -5,23 +5,50 @@ When a plan opts in (``Plan.calibrate``), every FPGA activation-quantization
 site — fused-chain entries, int8-GEMM inputs, fake-quant conv inputs and
 gconv FPGA slices — is recorded by name.  The backend then emits a
 ``capture`` program that runs a calibration batch through the module and
-returns each site's absolute-max activation; ``prepare`` freezes those into
+returns one amplitude statistic per site; ``prepare`` freezes those into
 per-tensor scales, and the run program drops the per-call amax reductions.
+
+Two calibrator kinds (``Plan.calibrate``):
+
+  * ``True`` / ``"amax"``  absolute max over the calibration batch — no
+    clipping, the original behaviour;
+  * ``"pct99"``            99th percentile of |activation| — clips the
+    outlier tail, trading saturation of rare spikes for finer grid
+    resolution on the bulk of the distribution.
 
 Plans that do NOT opt in keep per-sample scales (``axis=0``), preserving
 the serving batch-invariance contract exactly as before.  Frozen scales
 preserve it trivially — a constant scale can't couple batch rows — but
-they change numerics, so calibrated and uncalibrated plans compile (and
-cache, and serve) under different plan signatures.
+they change numerics, so every distinct calibrator kind compiles (and
+caches, and serves) under a different plan signature.
 """
 from __future__ import annotations
 
 from repro.core.passes.ir import PATH_FQ, PATH_GCONV, PATH_INT8, ModuleIR
 
+CALIBRATORS = ("amax", "pct99")
+
+
+def calibrator_kind(calibrate) -> str | None:
+    """Normalize ``Plan.calibrate`` (False/True/"amax"/"pct99") to a kind
+    name, or None when calibration is off.  Raises on unknown kinds so a
+    typo fails at plan-signature/lowering time, not silently at serve
+    time."""
+    if not calibrate:
+        return None
+    kind = "amax" if calibrate is True else str(calibrate)
+    if kind not in CALIBRATORS:
+        raise ValueError(f"unknown calibrator {calibrate!r}; expected "
+                         f"True or one of {CALIBRATORS}")
+    return kind
+
 
 def calibrate_pass(ir: ModuleIR) -> ModuleIR:
-    if not ir.plan or not getattr(ir.plan, "calibrate", False):
+    kind = calibrator_kind(getattr(ir.plan, "calibrate", False)
+                           if ir.plan else False)
+    if kind is None:
         return ir
+    ir.calibrator = kind
     in_chain = {nm for c in ir.chains for nm in c.names()}
     sites = [c.head for c in ir.chains]
     sites += [nm for nm, a in ir.ann.items()

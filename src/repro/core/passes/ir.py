@@ -86,12 +86,22 @@ class ModuleIR:
     ann: dict[str, NodeAnn] = field(default_factory=dict)
     chains: list[Chain] = field(default_factory=list)
     calib_sites: tuple[str, ...] = ()
+    calibrator: str = "amax"           # site statistic the capture records
 
 
 @dataclass
 class LoweredModule:
-    """Backend-pass output: the executable program for one module."""
+    """Backend-pass output: the executable program for one module.
+
+    ``steps`` is the typed step list the run/capture closures execute —
+    ``(value_name, kind, payload)`` tuples in graph order (kinds:
+    ``shuffle_glue`` / ``free`` / ``param``).  The stage-partition pass
+    (``passes/stage.py``) re-cuts this list at device boundaries, executing
+    the SAME per-step closures, which is what makes pipelined stage
+    execution bit-identical to the monolithic program.
+    """
     ir: ModuleIR
     prepare: Callable                  # params_m -> prepared_m
     run: Callable                      # (prepared_m, x) -> y
-    capture: Callable                  # (prepared_m, x) -> (y, {site: amax})
+    capture: Callable                  # (prepared_m, x) -> (y, {site: stat})
+    steps: list[tuple] = field(default_factory=list)

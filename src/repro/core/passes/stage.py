@@ -1,0 +1,181 @@
+"""Stage-partition pass: cut the lowered network at FPGA<->GPU boundaries.
+
+The backend pass emits each module as a linear step list (the same list its
+monolithic ``run`` closure executes).  This pass flattens those lists across
+the whole network, tags every step with its device (from the annotation
+pass), and cuts the flat sequence at every FPGA<->GPU transition into an
+ordered list of ``Stage``s — maximal same-device segments.  Each stage is a
+closure over the SAME per-step run closures the monolithic program uses, so
+executing the stages back to back is bit-identical to the monolithic call;
+the only thing that changes is that every device hand-off now materializes
+its live values, which is exactly where a software pipeline can overlap
+micro-batch i's front-end with micro-batch i-1's back-end
+(``repro.core.executor.PipelinedEngine``).
+
+Liveness is computed over the flat sequence: a stage's ``env`` input/output
+carries precisely the values later stages still need (namespaced
+``module.value`` keys).  The network input is special-cased: it is routed
+to every stage that reads it through a separate, never-donated argument
+(``needs_input``), so inter-stage envs can be donated without ever
+consuming a caller-owned buffer.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax.numpy as jnp
+
+from repro.core.passes.ir import LoweredModule
+
+_IN = "__net_in"                       # flat key of the network input
+_OUT = "__out"                         # flat key of the network output
+
+
+@dataclass(frozen=True)
+class _Step:
+    """One flattened execution step (module-namespaced value keys)."""
+    kind: str                          # param | free | glue_split | glue_cat
+    #                                  # | residual | reshape
+    device: str                        # "gpu" | "fpga"
+    reads: tuple[str, ...]
+    writes: tuple[str, ...]
+    mod: str = ""                      # module name (param steps)
+    pname: str = ""                    # prepared-tree key (param steps)
+    fn: Callable | None = None
+    half: int = 0                      # glue_split channel count
+
+
+@dataclass(frozen=True)
+class Stage:
+    """A maximal same-device segment, executable as one closure.
+
+    ``fn(prepared_slice, xin, env) -> env_out`` where ``prepared_slice``
+    maps ``"module.pname"`` to that step's prepared params, ``xin`` is the
+    network input (or ``()`` when ``needs_input`` is False) and ``env`` is
+    the dict of live inter-stage values.  ``env`` is safe to donate: its
+    leaves are always engine-owned stage outputs, never caller buffers.
+    """
+    device: str
+    fn: Callable
+    params: tuple[tuple[str, str], ...]   # (module, pname) pairs used
+    needs_input: bool
+    live_in: tuple[str, ...]
+    live_out: tuple[str, ...]
+
+
+def _flatten(lowered: list[tuple[str, LoweredModule]]) -> list[_Step]:
+    steps: list[_Step] = []
+    cur = _IN                          # key holding the current module input
+    for name, lm in lowered:
+        m = lm.ir.module
+
+        def key(local: str, _name=name, _cur=cur) -> str:
+            return _cur if local == "in" else f"{_name}.{local}"
+
+        for out_name, kind, payload in lm.steps:
+            if kind == "shuffle_glue":
+                if out_name == "split":
+                    steps.append(_Step(
+                        "glue_split", "gpu", (cur,),
+                        (key("split"), key("_identity")),
+                        half=m.node("split").spec.c_out))
+                else:
+                    steps.append(_Step(
+                        "glue_cat", "gpu",
+                        (key("_identity"), key(m.node("cat").inputs[1])),
+                        (key("cat"),)))
+                continue
+            if kind == "free":
+                inputs, fn = payload
+                steps.append(_Step(
+                    "free", "gpu", tuple(key(i) for i in inputs),
+                    (key(out_name),), fn=fn))
+                continue
+            pname, inputs, run, _site = payload
+            steps.append(_Step(
+                "param", lm.ir.ann[pname].device, (key(inputs[0]),),
+                (key(out_name),), mod=name, pname=pname, fn=run))
+        out_key = key(m.output)
+        if m.residual:
+            steps.append(_Step("residual", "gpu", (out_key, cur),
+                               (f"{name}.__res",)))
+            out_key = f"{name}.__res"
+        cur = out_key
+    steps.append(_Step("reshape", "gpu", (cur,), (_OUT,)))
+    return steps
+
+
+def _run_step(st: _Step, prepared_slice: dict, vals: dict) -> None:
+    if st.kind == "param":
+        vals[st.writes[0]] = st.fn(prepared_slice[f"{st.mod}.{st.pname}"],
+                                   vals[st.reads[0]])
+    elif st.kind == "free":
+        vals[st.writes[0]] = st.fn([vals[k] for k in st.reads])
+    elif st.kind == "glue_split":
+        x = vals[st.reads[0]]
+        vals[st.writes[0]] = x[..., st.half:]
+        vals[st.writes[1]] = x[..., :st.half]
+    elif st.kind == "glue_cat":
+        vals[st.writes[0]] = jnp.concatenate(
+            [vals[st.reads[0]], vals[st.reads[1]]], axis=-1)
+    elif st.kind == "residual":
+        vals[st.writes[0]] = vals[st.reads[0]] + vals[st.reads[1]]
+    else:                              # reshape (network output)
+        y = vals[st.reads[0]]
+        vals[st.writes[0]] = y.reshape(y.shape[0], -1)
+
+
+def _make_stage(seg: list[_Step], live_in: tuple[str, ...],
+                live_out: tuple[str, ...]) -> Stage:
+    needs_input = any(_IN in st.reads for st in seg)
+    params = tuple(dict.fromkeys((st.mod, st.pname) for st in seg
+                                 if st.kind == "param"))
+
+    def fn(prepared_slice, xin, env):
+        vals = dict(env)
+        if needs_input:
+            vals[_IN] = xin
+        for st in seg:
+            _run_step(st, prepared_slice, vals)
+        return {k: vals[k] for k in live_out}
+
+    return Stage(seg[0].device, fn, params, needs_input, live_in, live_out)
+
+
+def stage_partition(
+        lowered: list[tuple[str, LoweredModule]]) -> list[Stage]:
+    """Cut the flattened network into maximal same-device stages with exact
+    liveness on the inter-stage envs.  A fully single-device network (e.g.
+    plans=None) comes back as one stage — the degenerate pipeline."""
+    steps = _flatten(lowered)
+    segs: list[list[_Step]] = []
+    for st in steps:
+        if segs and segs[-1][0].device == st.device:
+            segs[-1].append(st)
+        else:
+            segs.append([st])
+
+    # Backwards liveness sweep: needed[i] = values stage i must receive.
+    # _IN is excluded — it travels via the dedicated xin argument.
+    stages: list[Stage] = []
+    needed: set[str] = {_OUT}
+    live_after: list[tuple[str, ...]] = []
+    for seg in reversed(segs):
+        live_after.append(tuple(sorted(needed)))
+        written: set[str] = set()
+        read: set[str] = set()       # read before (segment-locally) written
+        for st in seg:
+            read.update(k for k in st.reads
+                        if k != _IN and k not in written)
+            written.update(st.writes)
+        needed = (needed - written) | read
+    live_after.reverse()
+
+    live_in = tuple(sorted(needed - {_IN}))   # empty: env starts as {}
+    assert not live_in, f"unbound values at network entry: {live_in}"
+    prev_out: tuple[str, ...] = ()
+    for seg, lo in zip(segs, live_after):
+        stages.append(_make_stage(seg, prev_out, lo))
+        prev_out = lo
+    return stages

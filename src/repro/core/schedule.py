@@ -40,7 +40,17 @@ class Plan:
     gpu_only: Cost = ZERO
     res: Resources = Resources()
     note: str = ""
-    calibrate: bool = False        # freeze activation scales at prepare time
+    # freeze activation scales at prepare time: False, True (= "amax"),
+    # or a calibrator kind name ("amax" | "pct99")
+    calibrate: bool | str = False
+
+    @property
+    def calibrator(self) -> str | None:
+        """Normalized calibrator kind (None when calibration is off); the
+        plan-signature component that keeps distinct calibrators from ever
+        sharing a compiled engine."""
+        from repro.core.passes.calibrate import calibrator_kind
+        return calibrator_kind(self.calibrate)
 
     @property
     def energy_gain(self) -> float:
@@ -113,3 +123,58 @@ def split_spec_in(spec: ConvSpec, frac: float) -> tuple[ConvSpec, ConvSpec]:
 
 def module_gpu_only(m: ModuleGraph) -> Cost:
     return gpu_cost(m.nodes)
+
+
+# ---------------------------------------------------------------------------
+# Pipelined (cross-input overlap) cost estimate
+# ---------------------------------------------------------------------------
+#
+# Everything above prices ONE input walking the module: sequential segments
+# sum.  With stage-pipelined execution (repro.core.passes.stage) the FPGA
+# front-end of input i+1 overlaps the GPU back-end of input i, so the
+# steady-state beat is the MAX over stage latencies, and the serial sum is
+# only paid once as pipeline fill.  Energy still sums — overlap moves work
+# in time, it does not remove it.
+
+def plan_stage_costs(m: ModuleGraph, plan: Plan | None,
+                     act_bytes: int = 1) -> list[tuple[str, Cost]]:
+    """Per-stage ``(device, cost)`` of a module under the stage-partition
+    cut rule: maximal same-device runs in node order, plus the synthesized
+    GPU residual-add step for residual modules (so the segmentation is the
+    one ``passes/stage.py`` actually executes — an FPGA-ending residual
+    module really hands back to the GPU).  FPGA segments pay PCIe in/out
+    (the honest-accounting rule), GPU segments are plain gpu_cost.  A
+    plan-less / all-GPU module is a single stage."""
+    if plan is None:
+        out = [("gpu", gpu_cost(m.nodes))]
+    else:
+        segs: list[tuple[str, list[Node]]] = []
+        for n in m.nodes:
+            dev = "fpga" if (plan.assign.get(n.name) == "fpga"
+                             or n.name in plan.gconv) else "gpu"
+            if segs and segs[-1][0] == dev:
+                segs[-1][1].append(n)
+            else:
+                segs.append((dev, [n]))
+        out = []
+        for dev, nodes in segs:
+            if dev == "gpu":
+                out.append((dev, gpu_cost(nodes)))
+            else:
+                out.append((dev, fpga_chain_cost(
+                    nodes, nodes[0].spec.in_bytes(act_bytes),
+                    nodes[-1].spec.out_bytes(act_bytes), plan.g_par)))
+    if m.residual:
+        out.append(("gpu", ZERO))      # elementwise add: priced free
+    return out
+
+
+def pipelined_cost(stages: list[Cost], n_inputs: int = 1) -> Cost:
+    """Makespan of ``n_inputs`` through a stage pipeline: fill (every stage
+    once) + one max-stage beat per additional input.  Compare against
+    ``sum(stages) * n_inputs`` — today's fully-serialized schedule — to see
+    what overlap is worth.  Energy is per-input work times n_inputs."""
+    if not stages:
+        return ZERO
+    lat = cm.pipelined_latency([c.latency for c in stages], n_inputs)
+    return Cost(lat, sum(c.energy for c in stages) * n_inputs)

@@ -7,30 +7,56 @@ MobileNetV2 and ShuffleNetV2 plans simultaneously, keyed by the PR-1 plan
 signature — admits single-image requests into a dynamic batcher, and
 dispatches padded bucket-sized batches from a background drain thread.
 
-    server = HeteroServer(buckets=(1, 4, 8, 32), max_wait_ms=2.0)
+    server = HeteroServer(buckets=(1, 4, 8, 32), max_wait_ms=2.0,
+                          in_flight=4)
     server.register("mbv2", mods, plans, params, input_hw=(96, 96))
     with server:                        # starts the drain loop
         fut = server.submit("mbv2", image)        # returns immediately
         logits = fut.result()                     # de-batched row
 
+``in_flight`` is the dispatch depth.  At 1 (the pre-pipelining behaviour)
+the drain loop host-blocks on every batch: pad, compute, de-batch, repeat —
+fully serialized.  At k > 1 the drain loop leans on JAX's async dispatch
+and submits batches without ``block_until_ready()``, gating only on the
+(k-1)-th oldest unfinished computation BEFORE the next dispatch; a
+completion thread blocks on results in FIFO order, de-batches, and
+resolves futures as they land.  So padding and de-batching of
+neighbouring batches overlap device compute instead of gating it, and
+per-request ordering is preserved by construction (single dispatcher,
+single FIFO completion queue).  k = 2 keeps computations serialized and
+overlaps only host work (pad of batch i+1, de-batch of batch i-1, future
+resolution) with batch i's compute; k > 2 additionally admits concurrent
+computations — a win where per-op parallelism cannot fill the hardware
+(small feature maps, depthwise-heavy nets, genuinely distinct devices)
+and a cache-thrashing wash on large maps that already saturate a shared
+host (measured in ``benchmarks/run.py pipeline``).  Dispatched batch
+buffers are donated to the engine (the drain loop owns them and never
+reads them back): one input copy saved per batch.
+
 Guarantees:
   * results are bit-identical to ``compile_network`` called one request at
-    a time — the engine is batch-invariant and padding rows are inert;
+    a time — the engine is batch-invariant, padding rows are inert, and
+    neither donation nor in-flight depth changes any computed value;
   * every bucket shape is compile-warmed at register time, so no live
     request pays a jit trace;
   * a ``clear_cache()`` in ``repro.core.executor`` does not break a live
     server: the drain loop notices the stale engine and transparently
     recompiles (counted in ``stats()['recompiles']``).
+
+``register(..., pipelined=True)`` serves a network through the
+stage-pipelined engine (``compile_pipelined``) instead of the monolithic
+one — same bits, device hand-offs exposed for overlap.
 """
 from __future__ import annotations
 
+import queue
 import threading
 import time
 
 import jax
 import numpy as np
 
-from repro.core.executor import compile_network
+from repro.core.executor import compile_network, compile_pipelined
 from repro.core.hetero import init_network
 from repro.serving.batcher import (DEFAULT_BUCKETS, DynamicBatcher, Request,
                                    pad_batch, pick_bucket)
@@ -41,7 +67,7 @@ class _Entry:
     """One registered network: engine + prepared params + bucket policy."""
 
     def __init__(self, name, mods, plans, params, input_hw, buckets,
-                 use_pallas, calib_x=None):
+                 use_pallas, calib_x=None, pipelined=False):
         self.name = name
         self.mods = mods
         self.plans = plans
@@ -50,7 +76,9 @@ class _Entry:
         self.buckets = tuple(sorted(buckets))
         self.use_pallas = use_pallas
         self.calib_x = calib_x
-        self.engine = compile_network(mods, plans, use_pallas=use_pallas)
+        self.pipelined = pipelined
+        self._compile = compile_pipelined if pipelined else compile_network
+        self.engine = self._compile(mods, plans, use_pallas=use_pallas)
         if self.engine.needs_calibration and calib_x is None:
             raise ValueError(
                 f"{name}: plans request calibration (Plan.calibrate=True) "
@@ -62,14 +90,16 @@ class _Entry:
         return (batch, *self.input_hw, self.c_in)
 
     def warmup(self) -> dict:
+        # warm the donating variant: it is what the dispatch path calls
         return self.engine.warmup(
-            self.prepared, [self.input_shape(b) for b in self.buckets])
+            self.prepared, [self.input_shape(b) for b in self.buckets],
+            donate=True)
 
     def refresh(self):
         """Re-acquire the engine after an executor cache clear (re-running
         calibration from the stored batch when the plans need it)."""
-        self.engine = compile_network(self.mods, self.plans,
-                                      use_pallas=self.use_pallas)
+        self.engine = self._compile(self.mods, self.plans,
+                                    use_pallas=self.use_pallas)
         self.prepared = self.engine.prepare(self.params, self.calib_x)
         self.warmup()
 
@@ -78,15 +108,22 @@ class HeteroServer:
     """Async dynamic-batching server over ``repro.core.executor``."""
 
     def __init__(self, *, buckets=DEFAULT_BUCKETS, max_wait_ms: float = 2.0,
-                 use_pallas: bool | None = None):
+                 use_pallas: bool | None = None, in_flight: int = 1):
         self.buckets = tuple(sorted(buckets))
         self.use_pallas = use_pallas
+        self.in_flight = max(1, int(in_flight))
         self._batcher = DynamicBatcher(max_wait_s=max_wait_ms * 1e-3,
                                        max_batch=self.buckets[-1])
         self._entries: dict[str, _Entry] = {}
         self._caps: dict[str, tuple] = {}      # per-network bucket ladder
         self.metrics = ServerMetrics()
         self._thread: threading.Thread | None = None
+        self._cthread: threading.Thread | None = None
+        # dispatched-but-unresolved batches, FIFO to the completion thread
+        self._completions: queue.Queue | None = (
+            queue.Queue() if self.in_flight > 1 else None)
+        # async results the dispatcher has not yet gated on (depth window)
+        self._outstanding: list = []
         self._stop = threading.Event()
         self._lock = threading.Lock()
 
@@ -94,7 +131,8 @@ class HeteroServer:
 
     def register(self, name: str, mods, plans=None, params=None, *,
                  input_hw=(96, 96), buckets=None, warm: bool = True,
-                 use_pallas: bool | None = None, calib_x=None) -> dict:
+                 use_pallas: bool | None = None, calib_x=None,
+                 pipelined: bool = False) -> dict:
         """Compile, prepare and bucket-warm a network under ``name``.
 
         ``buckets`` overrides the server-wide bucket ladder (per-network
@@ -103,7 +141,9 @@ class HeteroServer:
         activation scales at prepare time (``Plan.calibrate``) — required
         for such plans, ignored otherwise.  Calibrated and uncalibrated
         plans carry different plan signatures, so mixed registrations
-        never share an engine.  Returns the engine's exec stats after
+        never share an engine.  ``pipelined=True`` serves through the
+        stage-pipelined engine (bit-identical results; device hand-offs
+        exposed for overlap).  Returns the engine's exec stats after
         warm-up (one trace per bucket)."""
         if params is None:
             params = init_network(mods, jax.random.PRNGKey(0))
@@ -111,7 +151,7 @@ class HeteroServer:
             use_pallas = self.use_pallas    # server-wide default
         entry = _Entry(name, mods, plans, params,
                        input_hw, buckets or self.buckets, use_pallas,
-                       calib_x=calib_x)
+                       calib_x=calib_x, pipelined=pipelined)
         with self._lock:
             self._entries[name] = entry
             self._caps[name] = entry.buckets
@@ -127,6 +167,11 @@ class HeteroServer:
         if self._thread is not None:
             return self
         self._stop.clear()
+        if self._completions is not None:
+            self._cthread = threading.Thread(target=self._completion_loop,
+                                             name="hetero-serve-complete",
+                                             daemon=True)
+            self._cthread.start()
         self._thread = threading.Thread(target=self._drain_loop,
                                         name="hetero-serve-drain",
                                         daemon=True)
@@ -134,12 +179,18 @@ class HeteroServer:
         return self
 
     def shutdown(self, timeout: float = 10.0) -> None:
-        """Stop the drain loop after flushing everything still queued."""
+        """Stop the drain loop after flushing everything still queued (and,
+        at in_flight > 1, after every dispatched batch completed)."""
         if self._thread is None:
             return
         self._stop.set()
         self._batcher.put(Request("__wake__", None))   # unblock wait_ready
         self._thread.join(timeout)
+        if self._thread.is_alive():
+            # drain thread still mid-flush (e.g. a long recompile): leave
+            # the completion thread running so its batches still resolve;
+            # a later shutdown() retries the join
+            return
         self._thread = None
         for name, reqs in self._batcher.drain_all():
             reqs = [r for r in reqs if r.network != "__wake__"]
@@ -149,6 +200,10 @@ class HeteroServer:
             cap = self._caps.get(name, self.buckets)[-1]
             for i in range(0, len(reqs), cap):
                 self._flush(name, reqs[i:i + cap], by_deadline=True)
+        if self._cthread is not None:
+            self._completions.put(None)                # completion sentinel
+            self._cthread.join(timeout)
+            self._cthread = None
 
     def __enter__(self) -> "HeteroServer":
         return self.start()
@@ -195,6 +250,11 @@ class HeteroServer:
                 self._flush(name, reqs, by_deadline)
 
     def _flush(self, name: str, reqs, by_deadline: bool) -> None:
+        """Dispatch one batch.  At in_flight == 1 this also completes it
+        inline (the fully-serialized pre-pipelining loop); otherwise the
+        async result is handed to the completion thread and this thread
+        immediately returns to batching — padding of batch i+1 overlaps
+        device compute of batch i."""
         with self._lock:
             entry = self._entries.get(name)
         if entry is None:                     # unregistered mid-flight
@@ -209,8 +269,32 @@ class HeteroServer:
                 self.metrics.record_recompile()
             bucket = pick_bucket(len(reqs), entry.buckets)
             xb = pad_batch([r.x for r in reqs], bucket)
-            out = entry.engine(entry.prepared, xb)
-            out.block_until_ready()
+            if self._completions is not None:
+                # depth gate BEFORE dispatch: this batch is padded and
+                # ready while at most (in_flight - 1) computations are
+                # still unfinished — at in_flight=2 compute stays
+                # serialized and only host work overlaps it
+                while len(self._outstanding) >= self.in_flight - 1:
+                    jax.block_until_ready(self._outstanding.pop(0))
+            # xb is drain-loop-owned and never read after dispatch: donate
+            # its buffer (exec_stats counts the copies saved)
+            out = entry.engine(entry.prepared, xb, donate=True)
+            if self._completions is not None:
+                self._outstanding.append(out)
+                self._completions.put((reqs, bucket, by_deadline, out))
+            else:
+                self._complete(reqs, bucket, by_deadline, out)
+        except Exception as e:                # pragma: no cover - defensive
+            for r in reqs:
+                if not r.future.done():
+                    r.future.set_exception(e)
+            self.metrics.record_failure(len(reqs))
+
+    def _complete(self, reqs, bucket: int, by_deadline: bool, out) -> None:
+        """Resolve one dispatched batch: block until the device result
+        lands, de-batch, fulfil futures."""
+        try:
+            jax.block_until_ready(out)
             # one host copy, then de-batch as numpy views — per-row device
             # slices would pay 1 dispatch per request
             rows = np.asarray(out)
@@ -226,6 +310,15 @@ class HeteroServer:
                     r.future.set_exception(e)
             self.metrics.record_failure(len(reqs))
 
+    def _completion_loop(self) -> None:
+        """FIFO completion path (in_flight > 1): batches resolve in
+        dispatch order, so per-request ordering survives pipelining."""
+        while True:
+            item = self._completions.get()
+            if item is None:                  # shutdown sentinel
+                return
+            self._complete(*item)
+
     # -- observability -----------------------------------------------------
 
     def stats(self) -> dict:
@@ -234,7 +327,9 @@ class HeteroServer:
         with self._lock:
             engines = {name: {**e.engine.exec_stats(),
                               "current": e.engine.is_current(),
+                              "pipelined": e.pipelined,
                               "buckets": e.buckets}
                        for name, e in self._entries.items()}
-        return {"server": self.metrics.snapshot(), "engines": engines,
+        return {"server": self.metrics.snapshot(),
+                "in_flight": self.in_flight, "engines": engines,
                 "executor_cache": cache_stats()}

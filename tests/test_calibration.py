@@ -95,6 +95,76 @@ def test_gpu_only_plans_never_need_calibration():
     assert not eng.needs_calibration    # no FPGA quant sites to freeze
 
 
+# --- calibrator kinds (amax vs pct99) --------------------------------------
+
+def _scales(prepared):
+    """Every frozen x_scale in a prepared tree, keyed module/site."""
+    out = {}
+    for mod, sites in prepared.items():
+        for site, p in sites.items():
+            if isinstance(p, dict) and "x_scale" in p:
+                out[f"{mod}/{site}"] = float(p["x_scale"])
+    return out
+
+
+def test_pct99_clips_below_amax_with_outliers():
+    """With an outlier spike in the calibration batch, the percentile
+    calibrator must freeze strictly smaller scales than abs-max at the
+    entry site (finer grid for the bulk, outlier saturates)."""
+    mods, _plans, cplans, params, calib = _setup()
+    spiked = calib.at[0, 0, 0, 0].set(1e3)
+    pplans = [replace(p, calibrate="pct99") for p in cplans]
+    e_a = compile_network(mods, cplans, use_pallas=False)
+    e_p = compile_network(mods, pplans, use_pallas=False)
+    s_a = _scales(e_a.prepare(params, spiked))
+    s_p = _scales(e_p.prepare(params, spiked))
+    assert set(s_a) == set(s_p) and s_a
+    assert all(s_p[k] <= s_a[k] + 1e-12 for k in s_a)
+    assert any(s_p[k] < s_a[k] * 0.99 for k in s_a)
+
+
+def test_calibrator_kinds_separate_signatures_and_engines():
+    mods, plans, cplans, params, calib = _setup()
+    pplans = [replace(p, calibrate="pct99") for p in plans]
+    aplans = [replace(p, calibrate="amax") for p in plans]
+    sig_a = plan_signature(mods, cplans, False)
+    assert sig_a == plan_signature(mods, aplans, False)  # True == "amax"
+    sig_p = plan_signature(mods, pplans, False)
+    assert sig_p != sig_a
+    e_a = compile_network(mods, cplans, use_pallas=False)
+    e_p = compile_network(mods, pplans, use_pallas=False)
+    assert e_a is not e_p
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(3), (2, 32, 32, 3))
+    out_a = e_a(e_a.prepare(params, calib), x)
+    out_p = e_p(e_p.prepare(params, calib), x)
+    # different frozen grids -> different numerics; pct99 really clips the
+    # tail so it drifts further from amax than amax does from uncalibrated
+    assert not bool((out_a == out_p).all())
+    cos = float(jnp.sum(out_a * out_p)
+                / (jnp.linalg.norm(out_a) * jnp.linalg.norm(out_p)))
+    assert cos > 0.95
+
+
+def test_pct99_batch_invariant():
+    mods, plans, _cplans, params, calib = _setup("shufflenetv2")
+    pplans = [replace(p, calibrate="pct99") for p in plans]
+    eng = compile_network(mods, pplans, use_pallas=False)
+    prep = eng.prepare(params, calib)
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(4), (4, 32, 32, 3))
+    out = eng(prep, x)
+    for i in range(x.shape[0]):
+        assert (eng(prep, x[i:i + 1])[0] == out[i]).all()
+
+
+def test_unknown_calibrator_kind_raises():
+    mods, plans, _c, _params, _calib = _setup()
+    bad = [replace(p, calibrate="pct999") for p in plans]
+    with pytest.raises(ValueError, match="unknown calibrator"):
+        plan_signature(mods, bad, False)
+    with pytest.raises(ValueError, match="unknown calibrator"):
+        compile_network(mods, bad, use_pallas=False)
+
+
 # --- serving ---------------------------------------------------------------
 
 def test_serving_rejects_calibrated_plans_without_batch():

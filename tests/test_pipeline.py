@@ -1,0 +1,304 @@
+"""Pipelined stage execution: stage-cut correctness (0 / 1 / many device
+boundaries), pipelined-vs-monolithic bit-match across networks, schemes and
+batch sizes, depth-k in-flight ordering under deadline flush, input-buffer
+donation accounting, and the pipelined cost estimate."""
+import time
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.costmodel import pipelined_latency
+from repro.core.executor import (compile_network, compile_pipelined,
+                                 plan_signature)
+from repro.core.graph import NETWORKS, bottleneck, fire, shuffle_unit
+from repro.core.hetero import init_network
+from repro.core.partitioner import (candidates, partition_network,
+                                    pipelined_summary)
+from repro.core.schedule import pipelined_cost, plan_stage_costs
+from repro.serving import HeteroServer
+
+RES = 24
+
+
+def _scheme_plans(m, scheme):
+    ps = [p for p in candidates(m) if p.scheme == scheme]
+    assert ps, f"no {scheme} candidate for {m.kind}"
+    return [ps[0]]
+
+
+def _engines(mods, plans):
+    mono = compile_network(mods, plans, use_pallas=False)
+    pipe = compile_pipelined(mods, plans, use_pallas=False)
+    params = init_network(mods, jax.random.PRNGKey(0))
+    return mono, pipe, mono.prepare(params)
+
+
+def _x(mods, batch, res=16, seed=1):
+    c_in = mods[0].nodes[0].spec.c_in
+    return 0.5 * jax.random.normal(jax.random.PRNGKey(seed),
+                                   (batch, res, res, c_in))
+
+
+# --- stage-cut correctness: 0 / 1 / many boundaries ------------------------
+
+def test_zero_boundaries_single_stage():
+    """An all-GPU plan (and plans=None) has no device edges to cut at —
+    the pipeline degenerates to one stage."""
+    mods = [fire("f", 16, 64, 16, 64)]
+    pipe = compile_pipelined(mods, None, use_pallas=False)
+    assert len(pipe.stages) == 1
+    plans = partition_network(NETWORKS["squeezenet"](),
+                              objective="gpu_only")
+    pipe2 = compile_pipelined(NETWORKS["squeezenet"](), plans,
+                              use_pallas=False)
+    assert len(pipe2.stages) == 1
+    assert pipe2.stages[0].device == "gpu"
+
+
+def test_one_boundary_two_stages():
+    """fpga_fused fire: all convs FPGA, concat on GPU -> exactly one
+    FPGA->GPU edge, two stages."""
+    m = fire("f", 16, 64, 16, 64)
+    pipe = compile_pipelined([m], _scheme_plans(m, "fpga_fused"),
+                             use_pallas=False)
+    assert [s.device for s in pipe.stages] == ["fpga", "gpu"]
+
+
+def test_many_boundaries_alternate_and_merge():
+    """Full paper-faithful MobileNetV2: many cuts; stages must strictly
+    alternate devices (adjacent same-device segments merge, including
+    across module boundaries)."""
+    mods = NETWORKS["mobilenetv2"]()
+    plans = partition_network(mods, paper_faithful=True)
+    pipe = compile_pipelined(mods, plans, use_pallas=False)
+    devices = [s.device for s in pipe.stages]
+    assert len(devices) > 4
+    assert all(a != b for a, b in zip(devices, devices[1:]))
+    assert "fpga" in devices and "gpu" in devices
+
+
+def test_stage_envs_carry_exact_liveness():
+    """Each stage's declared live_out is its successor's live_in, and the
+    final stage yields only the network output."""
+    mods = NETWORKS["shufflenetv2"]()
+    plans = partition_network(mods, paper_faithful=True)
+    pipe = compile_pipelined(mods, plans, use_pallas=False)
+    for a, b in zip(pipe.stages, pipe.stages[1:]):
+        assert a.live_out == b.live_in
+    assert pipe.stages[-1].live_out == ("__out",)
+
+
+# --- bit-match vs the monolithic engine ------------------------------------
+
+@pytest.mark.parametrize("net", list(NETWORKS))
+@pytest.mark.parametrize("batch", [1, 4, 32])
+def test_network_pipelined_bitmatch(net, batch):
+    mods = NETWORKS[net]()
+    plans = partition_network(mods, paper_faithful=True)
+    mono, pipe, prep = _engines(mods, plans)
+    x = _x(mods, batch, res=RES)
+    assert bool(jnp.all(mono(prep, x) == pipe(prep, x)))
+
+
+SCHEME_CASES = [
+    ("fire", lambda: fire("f", 16, 64, 16, 64),
+     ["gpu_only", "fpga_fused", "parallel_branch", "gconv_split"]),
+    ("bottleneck", lambda: bottleneck("b", 16, 24, 24, 1, 6),
+     ["gpu_only", "fpga_fused", "dwconv_split", "fused_layer"]),
+    ("shuffle_unit", lambda: shuffle_unit("s", 16, 48, False),
+     ["fpga_fused", "dwconv_split", "fused_layer"]),
+    ("shuffle_unit_down", lambda: shuffle_unit("sd", 16, 48, True),
+     ["parallel_branch"]),
+]
+
+
+@pytest.mark.parametrize("kind,builder,schemes", SCHEME_CASES,
+                         ids=[c[0] for c in SCHEME_CASES])
+def test_scheme_pipelined_bitmatch(kind, builder, schemes):
+    for scheme in schemes:
+        m = builder()
+        plans = _scheme_plans(m, scheme)
+        mono, pipe, prep = _engines([m], plans)
+        for batch in (1, 4):
+            x = _x([m], batch, seed=batch)
+            assert bool(jnp.all(mono(prep, x) == pipe(prep, x))), \
+                f"{kind}/{scheme} batch {batch}"
+
+
+def test_run_many_matches_per_batch_calls_any_depth():
+    mods = NETWORKS["mobilenetv2"]()
+    plans = partition_network(mods, paper_faithful=True)
+    mono, pipe, prep = _engines(mods, plans)
+    xs = [_x(mods, 2, res=RES, seed=i) for i in range(5)]
+    refs = [mono(prep, x) for x in xs]
+    for depth in (1, 2, 4):
+        outs = pipe.run_many(prep, xs, depth=depth)
+        assert len(outs) == len(xs)
+        for o, r in zip(outs, refs):
+            assert bool(jnp.all(o == r))
+
+
+def test_pipelined_caller_input_never_donated():
+    """Inter-stage envs are donated, but the caller's input array must
+    survive both __call__ and run_many."""
+    m = bottleneck("b", 16, 24, 24, 1, 6)
+    plans = _scheme_plans(m, "dwconv_split")
+    _mono, pipe, prep = _engines([m], plans)
+    x = _x([m], 2)
+    pipe(prep, x)
+    pipe.run_many(prep, [x, x], depth=2)
+    assert bool(jnp.all(x == x))          # would raise if x were deleted
+    stats = pipe.exec_stats()
+    assert stats["stages"] >= 3
+    assert stats["donated_calls"] >= 1 and stats["donated_bytes"] > 0
+
+
+def test_pipelined_signature_and_cache_separate_from_monolithic():
+    mods = [fire("f", 8, 16, 4, 8)]
+    mono = compile_network(mods, None, use_pallas=False)
+    pipe = compile_pipelined(mods, None, use_pallas=False)
+    assert pipe is not mono
+    assert pipe.signature != mono.signature
+    assert pipe.signature[0] == "pipelined"
+    assert pipe.signature[1:] == plan_signature(mods, None, False)
+    assert compile_pipelined(mods, None, use_pallas=False) is pipe
+
+
+def test_pipelined_with_calibrated_plans_bitmatch():
+    from dataclasses import replace
+    mods = NETWORKS["mobilenetv2"]()
+    plans = [replace(p, calibrate=True)
+             for p in partition_network(mods, paper_faithful=True)]
+    mono = compile_network(mods, plans, use_pallas=False)
+    pipe = compile_pipelined(mods, plans, use_pallas=False)
+    params = init_network(mods, jax.random.PRNGKey(0))
+    calib = _x(mods, 4, res=RES, seed=9)
+    prep = mono.prepare(params, calib)
+    x = _x(mods, 3, res=RES)
+    assert bool(jnp.all(mono(prep, x) == pipe(prep, x)))
+
+
+# --- monolithic donation (serving hot path) --------------------------------
+
+def test_donated_call_same_bits_and_consumes_buffer():
+    m = fire("f", 8, 16, 4, 8)
+    eng = compile_network([m], None, use_pallas=False)
+    params = init_network([m], jax.random.PRNGKey(0))
+    prep = eng.prepare(params)
+    x = _x([m], 2, res=8)
+    ref = eng(prep, x)
+    xd = jnp.array(x)                     # engine-owned copy to donate
+    out = eng(prep, xd, donate=True)
+    assert bool(jnp.all(out == ref))
+    stats = eng.exec_stats()
+    assert stats["donated_calls"] == 1
+    assert stats["donated_bytes"] == x.nbytes
+    # the non-donating path must leave caller arrays untouched
+    assert bool(jnp.all(x == x))
+
+
+# --- serving: in-flight depth ----------------------------------------------
+
+def _serve_case(in_flight, max_wait_ms=15.0, pipelined=False):
+    m = bottleneck("b", 16, 24, 24, 1, 6)
+    plans = _scheme_plans(m, "dwconv_split")
+    params = init_network([m], jax.random.PRNGKey(1))
+    server = HeteroServer(buckets=(1, 4), max_wait_ms=max_wait_ms,
+                          in_flight=in_flight)
+    server.register("b", [m], plans, params, input_hw=(16, 16),
+                    pipelined=pipelined)
+    eng = compile_network([m], plans)
+    return server, eng, eng.prepare(params)
+
+
+def test_in_flight_ordering_under_deadline_flush():
+    """Trickled submissions force deadline flushes; with depth-3 dispatch
+    every future must still resolve to its own request's row (FIFO
+    completion preserves per-request ordering)."""
+    server, eng, prep = _serve_case(in_flight=3, max_wait_ms=5.0)
+    imgs = [jax.random.normal(jax.random.PRNGKey(i), (16, 16, 24))
+            for i in range(12)]
+    with server:
+        futs = []
+        for i, x in enumerate(imgs):
+            futs.append(server.submit("b", x))
+            if i % 3 == 2:
+                time.sleep(0.012)        # let the deadline fire mid-stream
+        outs = [f.result(timeout=60) for f in futs]
+    for x, out in zip(imgs, outs):
+        assert bool(jnp.all(out == eng(prep, x[None])[0]))
+    snap = server.metrics.snapshot()
+    assert snap["completed"] == len(imgs) and snap["failed"] == 0
+    assert snap["deadline_flushes"] >= 1
+
+
+def test_in_flight_shutdown_drains_pending_completions():
+    server, eng, prep = _serve_case(in_flight=4, max_wait_ms=2.0)
+    imgs = [jax.random.normal(jax.random.PRNGKey(50 + i), (16, 16, 24))
+            for i in range(10)]
+    server.start()
+    futs = [server.submit("b", x) for x in imgs]
+    server.shutdown()
+    for x, f in zip(imgs, futs):
+        assert bool(jnp.all(f.result(timeout=60)
+                            == eng(prep, x[None])[0]))
+
+
+def test_pipelined_serving_bitmatch():
+    """register(pipelined=True) serves through the stage engine; rows must
+    still bit-match batch-1 monolithic calls."""
+    server, eng, prep = _serve_case(in_flight=2, pipelined=True)
+    assert server.stats()["engines"]["b"]["pipelined"]
+    imgs = [jax.random.normal(jax.random.PRNGKey(80 + i), (16, 16, 24))
+            for i in range(6)]
+    with server:
+        futs = [server.submit("b", x) for x in imgs]
+        outs = [f.result(timeout=60) for f in futs]
+    for x, out in zip(imgs, outs):
+        assert bool(jnp.all(out == eng(prep, x[None])[0]))
+
+
+# --- pipelined cost estimate -----------------------------------------------
+
+def test_pipelined_latency_fill_plus_beats():
+    assert pipelined_latency([], 5) == 0.0
+    assert pipelined_latency([2.0, 1.0], 1) == pytest.approx(3.0)
+    # fill (3) + 3 extra beats of the slowest stage (2 each)
+    assert pipelined_latency([2.0, 1.0], 4) == pytest.approx(9.0)
+
+
+def test_plan_stage_costs_match_cut_rule():
+    m = bottleneck("b", 16, 24, 24, 1, 6)     # residual module
+    plans = _scheme_plans(m, "dwconv_split")  # fpga, gpu, fpga + res add
+    segs = plan_stage_costs(m, plans[0])
+    assert [d for d, _c in segs] == ["fpga", "gpu", "fpga", "gpu"]
+    assert [d for d, _c in plan_stage_costs(m, None)] == ["gpu", "gpu"]
+    total = pipelined_cost([c for _d, c in segs], 1)
+    assert total.latency == pytest.approx(
+        sum(c.latency for _d, c in segs))
+
+
+def test_pipelined_summary_matches_cut_for_fpga_tail_and_residual():
+    """Modules ending on FPGA nodes (and residual modules) hand back to
+    the GPU in the executable cut — the cost model must count those
+    stages too, not just conv-node segments."""
+    m = bottleneck("b", 16, 24, 24, 1, 6)
+    for scheme in ("fpga_fused", "fused_layer"):
+        plans = _scheme_plans(m, scheme)
+        pipe = compile_pipelined([m], plans, use_pallas=False)
+        s = pipelined_summary([m], plans)
+        assert s["n_stages"] == len(pipe.stages), scheme
+
+
+def test_pipelined_summary_prices_overlap():
+    """Steady-state beat <= serial walk, so overlap_speedup >= 1; the
+    stage count must agree with the executable stage cut."""
+    for net, builder in NETWORKS.items():
+        mods = builder()
+        plans = partition_network(mods, paper_faithful=True)
+        s = pipelined_summary(mods, plans, n_inflight=8)
+        assert s["overlap_speedup"] >= 1.0
+        assert s["steady_ms_per_input"] <= s["serial_ms_per_input"] + 1e-9
+        pipe = compile_pipelined(mods, plans, use_pallas=False)
+        assert s["n_stages"] == len(pipe.stages)
