@@ -19,8 +19,11 @@ silently dropping a benchmark must not pass the guard.
 
 Besides the threshold-derated ``metrics``, the baseline may pin absolute
 ``floors`` — invariants checked without derating: multi-in-flight serving
-must not fall below the single-in-flight loop (speedup >= 1) and served
-rows must bit-match batch-1 monolithic calls (bitmatch == 1).
+must not fall below the single-in-flight loop (speedup >= 1), batched
+mixed-resolution QoS serving must not fall below the sequential
+per-resolution loop (qos vs_seq >= 1), and served rows must bit-match
+batch-1 monolithic calls (bitmatch == 1 — across resolutions, priority
+lanes, and a mid-stream ``swap_params`` for the qos hotswap row).
 """
 from __future__ import annotations
 

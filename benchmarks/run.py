@@ -13,6 +13,13 @@ Prints ``name,us_per_call,derived`` CSV rows:
          run_many micro-batch throughput, burst rps at in_flight 1/2/4,
          and the served-rows-bit-match check — the guarded rows assert
          multi-in-flight >= single-in-flight at batch >= 8
+  qos    multi-resolution QoS serving (§Serving QoS): per-(network,
+         resolution, priority) lane scheduling vs sequential
+         per-resolution batch-1 serving, per-priority lane percentiles,
+         and the prepared-parameter hot-swap bit-match check — the
+         guarded rows assert mixed-resolution batched throughput >=
+         the sequential loop on all three networks and that every
+         served row matches exactly one parameter generation
   serve  batched multi-plan serving vs sequential baselines    (§Serving):
          serve/<net>/seq_interpreted   per-request us through the oracle
          serve/<net>/seq_compiled      per-request us, engine batch-1 loop
@@ -294,6 +301,123 @@ def serve_rows(n_req=32, res=96):
     return rows
 
 
+def qos_rows(n_req=48, res_list=(32, 48)):
+    """Multi-resolution QoS serving: every (network, resolution, priority)
+    triple is its own batching lane, so one server multiplexes input
+    shapes the way real deployments do (fixed accelerator config, varying
+    request shapes).  Rows per network:
+
+      qos/<net>/seq_perres       sequential batch-1 engine loop over the
+                                 same mixed-resolution stream (us/req)
+      qos/<net>/mixed_res_burst  batched mixed-resolution + mixed-priority
+                                 burst (best of 3): us/req + rps, overall
+                                 and per-priority-lane p50/p99, and
+                                 vs_seq — guarded at an absolute floor of
+                                 1.0 on ALL three networks (batching must
+                                 never lose to the sequential loop)
+      qos/<net>/hotswap          swap_params mid-stream: shadow-prepare
+                                 wall time + the bit-match invariant
+                                 (every served row — across resolutions,
+                                 priorities, and the swap — equals a
+                                 batch-1 engine call under exactly one
+                                 parameter generation; rows submitted
+                                 after the swap returned match the new
+                                 generation; floor bitmatch = 1)
+    """
+    from repro.core.executor import compile_network
+    from repro.core.graph import NETWORKS
+    from repro.core.hetero import init_network
+    from repro.core.partitioner import partition_network
+    from repro.serving import HeteroServer, percentile
+    rows = []
+    buckets = (1, 4, 8)
+
+    def qos_burst(server, net, reqs):
+        """Closed-loop burst keeping (x, priority, future) for bit-checks."""
+        t0 = time.perf_counter()
+        lats, futs = [], []
+        for x, prio in reqs:
+            t_sub = time.perf_counter()
+            f = server.submit(net, x, priority=prio)
+            f.add_done_callback(
+                lambda _f, t=t_sub: lats.append(time.perf_counter() - t))
+            futs.append(f)
+        outs = [f.result(timeout=300) for f in futs]
+        return time.perf_counter() - t0, lats, outs
+
+    for net, builder in NETWORKS.items():
+        mods = builder()
+        plans = partition_network(mods, paper_faithful=True)
+        params_a = init_network(mods, jax.random.PRNGKey(0))
+        params_b = init_network(mods, jax.random.PRNGKey(7))
+        eng = compile_network(mods, plans)
+        prep_a, prep_b = eng.prepare(params_a), eng.prepare(params_b)
+        # interleaved mixed-resolution stream, every 4th request urgent
+        reqs = [(jax.random.normal(jax.random.PRNGKey(i),
+                                   (res_list[i % len(res_list)],
+                                    res_list[i % len(res_list)], 3)),
+                 0 if i % 4 == 0 else 1)
+                for i in range(n_req)]
+        for r in res_list:                 # warm the batch-1 shapes
+            jax.block_until_ready(eng(prep_a, jnp.zeros((1, r, r, 3))))
+        t0 = time.perf_counter()
+        for x, _prio in reqs:              # sequential per-resolution loop
+            jax.block_until_ready(eng(prep_a, x[None]))
+        t_seq = (time.perf_counter() - t0) / n_req * 1e6
+        server = HeteroServer(buckets=buckets, max_wait_ms=2.0, in_flight=2)
+        server.register(net, mods, plans, params_a,
+                        input_hw=[(r, r) for r in res_list], buckets=buckets)
+        with server:
+            qos_burst(server, net, reqs[:8])          # warm the live path
+            wall, lats, outs = qos_burst(server, net, reqs)
+            for _ in range(2):                        # best of 3 bursts
+                w2, l2, o2 = qos_burst(server, net, reqs)
+                if w2 < wall:
+                    wall, lats, outs = w2, l2, o2
+            # per-lane percentiles snapshotted HERE so they describe the
+            # burst phase, not the hot-swap traffic below
+            burst_lanes = server.metrics.snapshot()["lanes"]
+            match = all(
+                bool((out == eng(prep_a, x[None])[0]).all())
+                for (x, _p), out in zip(reqs, outs))
+            # hot-swap mid-stream: first half rides the old generation,
+            # the swap lands without draining, second half must serve
+            # the new one
+            pre = [server.submit(net, x, priority=p)
+                   for x, p in reqs[:n_req // 2]]
+            t_swap = time.perf_counter()
+            server.swap_params(net, params_b)
+            swap_ms = (time.perf_counter() - t_swap) * 1e3
+            post = [server.submit(net, x, priority=p)
+                    for x, p in reqs[n_req // 2:]]
+            pre_outs = [f.result(timeout=300) for f in pre]
+            post_outs = [f.result(timeout=300) for f in post]
+            for (x, _p), out in zip(reqs, pre_outs):  # old OR new, never mixed
+                match &= (bool((out == eng(prep_a, x[None])[0]).all())
+                          or bool((out == eng(prep_b, x[None])[0]).all()))
+            for (x, _p), out in zip(reqs[n_req // 2:], post_outs):
+                match &= bool((out == eng(prep_b, x[None])[0]).all())
+        t_b = wall / n_req * 1e6
+        snap = server.metrics.snapshot()
+        lane_p99 = {0: [], 1: []}
+        for label, st in burst_lanes.items():
+            lane_p99[int(label.rsplit("/p", 1)[1])].append(st["p99_ms"])
+        res_tag = "x".join(str(r) for r in res_list)   # comma-free CSV
+        rows.append((f"qos/{net}/seq_perres", t_seq,
+                     f"rps={1e6 / t_seq:.1f};res={res_tag}"))
+        rows.append((f"qos/{net}/mixed_res_burst", t_b,
+                     f"rps={1e6 / t_b:.1f};"
+                     f"p50_ms={percentile(lats, 50) * 1e3:.2f};"
+                     f"p99_ms={percentile(lats, 99) * 1e3:.2f};"
+                     f"hi_p99_ms={max(lane_p99[0] or [0.0]):.2f};"
+                     f"bulk_p99_ms={max(lane_p99[1] or [0.0]):.2f};"
+                     f"vs_seq={t_seq / t_b:.2f}x"))
+        rows.append((f"qos/{net}/hotswap", swap_ms * 1e3,
+                     f"swap_ms={swap_ms:.1f};swaps={snap['swaps']};"
+                     f"bitmatch={1.0 if match else 0.0}"))
+    return rows
+
+
 def pipeline_rows(n_req=96, res=32, batch=8):
     """The paper's overlap argument, made measurable: monolithic vs
     stage-pipelined engine execution, and single- vs multi-in-flight
@@ -470,6 +594,7 @@ SECTIONS = {
     "tpu_map": tpu_map_rows,
     "hetero_exec": hetero_exec_rows,
     "serve": serve_rows,
+    "qos": qos_rows,
     "pipeline": pipeline_rows,
     "kernels": kernel_bench,
     "roofline": roofline_rows,

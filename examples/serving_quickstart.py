@@ -1,7 +1,8 @@
 """Serving quickstart: all three paper networks resident behind one
-``HeteroServer`` — dynamic batching into padded bucket shapes, async
-submit/future dispatch, per-request results bit-identical to batch-1
-engine calls.
+``HeteroServer`` — multi-resolution lanes, priority QoS, dynamic batching
+into padded bucket shapes, async submit/future dispatch, and a mid-stream
+prepared-parameter hot-swap, with per-request results bit-identical to
+batch-1 engine calls of the serving parameter generation.
 
     PYTHONPATH=src python examples/serving_quickstart.py [--res 96]
                                                          [--requests 48]
@@ -22,6 +23,9 @@ from repro.serving import HeteroServer
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--res", type=int, default=96)
+    ap.add_argument("--res2", type=int, default=64,
+                    help="second resident resolution (its own lanes and "
+                         "warmed traces; batches never mix shapes)")
     ap.add_argument("--requests", type=int, default=48)
     ap.add_argument("--in-flight", type=int, default=2,
                     help="dispatch depth: batches in flight without a "
@@ -31,45 +35,75 @@ def main():
     server = HeteroServer(buckets=(1, 4, 8, 32), max_wait_ms=2.0,
                           in_flight=args.in_flight)
     engines = {}
+    resolutions = [(args.res, args.res), (args.res2, args.res2)]
     for net, builder in NETWORKS.items():
         mods = builder()
         plans = partition_network(mods, paper_faithful=True)
         params = init_network(mods, jax.random.PRNGKey(0))
         t0 = time.perf_counter()
         stats = server.register(net, mods, plans, params,
-                                input_hw=(args.res, args.res))
+                                input_hw=resolutions)
         print(f"registered {net:13s} ({len(mods)} modules, "
-              f"{stats['traces']} bucket traces, "
+              f"{stats['traces']} bucket x resolution traces, "
               f"{time.perf_counter() - t0:.1f}s compile+warm)")
         eng = compile_network(mods, plans)
         engines[net] = (eng, eng.prepare(params))
 
     names = list(NETWORKS)
-    reqs = [(names[i % 3],
+    # mixed networks, mixed resolutions, every 4th request deadline-critical
+    reqs = [(names[i % 3], i % 4 == 0,
              jax.random.normal(jax.random.PRNGKey(i),
-                               (args.res, args.res, 3)))
+                               (*resolutions[i % 2], 3)))
             for i in range(args.requests)]
 
     with server:
         t0 = time.perf_counter()
-        futs = [(net, x, server.submit(net, x)) for net, x in reqs]
+        futs = [(net, x, server.submit(net, x, priority=0 if hot else 1))
+                for net, hot, x in reqs]
         outs = [(net, x, f.result()) for net, x, f in futs]
         wall = time.perf_counter() - t0
 
-    # the serving contract: batching never changed anyone's logits
-    exact = all(bool(jnp.all(out == eng(prep, x[None])[0]))
-                for net, x, out in outs
-                for eng, prep in [engines[net]])
+        # hot-swap mobilenetv2's weights mid-traffic: no drain, batches
+        # already in flight finish on the old generation
+        net = "mobilenetv2"
+        mods = NETWORKS[net]()
+        params2 = init_network(mods, jax.random.PRNGKey(1))
+        more = [server.submit(net, x) for _n, _h, x in reqs[:6]]
+        info = server.swap_params(net, params2)
+        eng, prep_old = engines[net]
+        engines[net] = (eng, eng.prepare(params2))
+        after = [server.submit(net, x).result() for _n, _h, x in reqs[:6]]
+        for f in more:
+            f.result()
+
+    # the serving contract: batching never changed anyone's logits — the
+    # first wave (incl. pre-swap mobilenetv2 rows) checks against the
+    # generation it was served with, the post-swap rows against the new one
+    def first_wave_prep(net):
+        return prep_old if net == "mobilenetv2" else engines[net][1]
+
+    exact = all(bool(jnp.all(out == engines[net][0](first_wave_prep(net),
+                                                    x[None])[0]))
+                for net, x, out in outs)
+    eng, prep2 = engines["mobilenetv2"]
+    exact &= all(bool(jnp.all(out == eng(prep2, x[None])[0]))
+                 for (_n, _h, x), out in zip(reqs[:6], after))
     snap = server.metrics.snapshot()
     print(f"\n{len(reqs)} mixed requests in {wall * 1e3:.0f} ms "
           f"({len(reqs) / wall:.0f} req/s) across {snap['batches']} batches "
-          f"({snap['padded_slots']} padded slots)")
+          f"({snap['padded_slots']} padded slots, "
+          f"{snap['swaps']} hot-swap -> generation "
+          f"{info['generation']})")
     print(f"latency p50 {snap['p50_ms']:.1f} ms, p99 {snap['p99_ms']:.1f} ms")
-    print(f"bit-identical to per-request engine calls: {exact}")
+    for lane, st in sorted(snap["lanes"].items()):
+        print(f"  lane {lane:24s} completed={st['completed']:3d} "
+              f"p50 {st['p50_ms']:6.1f} ms  p99 {st['p99_ms']:6.1f} ms")
+    print(f"bit-identical to per-request engine calls "
+          f"(post-swap rows vs the new generation): {exact}")
     print("\nper-engine exec stats:")
     for name, e in server.stats()["engines"].items():
         print(f"  {name:13s} calls={e['calls']:3d} traces={e['traces']} "
-              f"buckets={e['buckets']} "
+              f"prepares={e['prepares']} gen={e['param_generation']} "
               f"donated={e['donated_bytes'] // 1024}kB")
 
 

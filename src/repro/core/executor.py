@@ -52,6 +52,7 @@ from __future__ import annotations
 
 import threading
 import warnings
+from collections.abc import Mapping
 from contextlib import contextmanager, nullcontext
 from dataclasses import astuple
 
@@ -108,6 +109,53 @@ def plan_signature(mods: list[ModuleGraph], plans: list[Plan] | None,
     return (use_pallas, tuple(sig))
 
 
+_PREPARE_GEN = [0]                  # process-global monotonic prepare stamp
+_PREPARE_GEN_LOCK = threading.Lock()
+
+
+def _next_prepare_generation() -> int:
+    with _PREPARE_GEN_LOCK:
+        _PREPARE_GEN[0] += 1
+        return _PREPARE_GEN[0]
+
+
+class PreparedParams(Mapping):
+    """Generation-stamped handle over one prepared parameter tree.
+
+    Every ``engine.prepare`` draws from one process-global monotonic
+    counter, so a serving layer hot-swapping weights can tell which
+    parameter generation served a given batch: no two ``prepare`` calls
+    ever share a stamp, and the numbering never rewinds — not even when
+    ``clear_cache`` forces a recompile onto a fresh engine instance.
+    The engine unwraps ``.tree`` before dispatch; the ``Mapping``
+    interface is preserved so callers that index the raw tree
+    (``prepared[mod][site]``) keep working unchanged."""
+
+    __slots__ = ("tree", "generation")
+
+    def __init__(self, tree: dict, generation: int):
+        self.tree = tree
+        self.generation = generation
+
+    def __getitem__(self, key):
+        return self.tree[key]
+
+    def __iter__(self):
+        return iter(self.tree)
+
+    def __len__(self):
+        return len(self.tree)
+
+    def __repr__(self):  # pragma: no cover - debug aid
+        return (f"PreparedParams(generation={self.generation}, "
+                f"modules={list(self.tree)})")
+
+
+def _unwrap(prepared):
+    """Accept both the stamped handle and a raw prepared tree."""
+    return getattr(prepared, "tree", prepared)
+
+
 class CompiledNetwork:
     """A (modules, plans) pair lowered and jitted once.  Call ``prepare``
     once per parameter tree, then treat the instance as the forward fn.
@@ -133,18 +181,24 @@ class CompiledNetwork:
         # batch is drain-loop-owned and never read again)
         self._jitted_donate = jax.jit(lowered.run, donate_argnums=(1,))
         self._shapes_seen: set = set()
-        self._exec = {"calls": 0, "traces": 0,
+        self._exec = {"calls": 0, "traces": 0, "prepares": 0,
                       "donated_calls": 0, "donated_bytes": 0}
         # cached engines are shared across threads (serving drain loop +
         # direct callers); keep the accounting race-free
         self._stats_lock = threading.Lock()
 
-    def prepare(self, params, calib_x=None) -> dict:
+    def prepare(self, params, calib_x=None) -> PreparedParams:
         """One-time parameter lowering: FPGA weights quantized here (int8
         resident for the GEMM path), GPU weights passed through.  When the
         plans opted into calibration (``needs_calibration``), a calibration
-        batch is required and activation scales are frozen from it."""
-        return self._prepare_fn(params, calib_x)
+        batch is required and activation scales are frozen from it.
+        Returns a generation-stamped ``PreparedParams`` handle (the stamp
+        is a process-global monotonic prepare counter — hot-swap
+        bookkeeping that survives engine recompiles)."""
+        tree = self._prepare_fn(params, calib_x)
+        with self._stats_lock:
+            self._exec["prepares"] += 1
+        return PreparedParams(tree, _next_prepare_generation())
 
     def _count_call(self, x, donate: bool) -> None:
         key = (tuple(x.shape), str(getattr(x, "dtype", "f32")), donate)
@@ -165,10 +219,11 @@ class CompiledNetwork:
         first = ((tuple(x.shape), str(getattr(x, "dtype", "f32")), donate)
                  not in self._shapes_seen)
         self._count_call(x, donate)
+        tree = _unwrap(prepared)
         with _quiet_donation() if (first and donate) else nullcontext():
             if donate:
-                return self._jitted_donate(prepared, x)
-            return self._jitted(prepared, x)
+                return self._jitted_donate(tree, x)
+            return self._jitted(tree, x)
 
     def warmup(self, prepared, shapes, *, donate: bool = False) -> dict:
         """Trace/compile each input shape once on zeros (per-bucket compile
@@ -225,17 +280,22 @@ class PipelinedEngine:
             for i, s in enumerate(self.stages)]
         self._shapes_seen: set = set()
         self._env_bytes: dict[tuple, int] = {}   # per input shape, at trace
-        self._exec = {"calls": 0, "traces": 0, "stages": len(self.stages),
+        self._exec = {"calls": 0, "traces": 0, "prepares": 0,
+                      "stages": len(self.stages),
                       "donated_calls": 0, "donated_bytes": 0}
         self._stats_lock = threading.Lock()
 
-    def prepare(self, params, calib_x=None) -> dict:
-        return self._prepare_fn(params, calib_x)
+    def prepare(self, params, calib_x=None) -> PreparedParams:
+        tree = self._prepare_fn(params, calib_x)
+        with self._stats_lock:
+            self._exec["prepares"] += 1
+        return PreparedParams(tree, _next_prepare_generation())
 
     def _slices(self, prepared) -> list:
         """Per-stage prepared-parameter slices (tiny host-side dicts; each
         stage's jit signature only carries the weights it actually uses)."""
-        return [{f"{m}.{p}": prepared[m][p] for m, p in s.params}
+        tree = _unwrap(prepared)
+        return [{f"{m}.{p}": tree[m][p] for m, p in s.params}
                 for s in self.stages]
 
     def _dispatch(self, slices, x, env, s: int):

@@ -1,14 +1,18 @@
-"""Batched multi-plan serving on the compiled heterogeneous engine.
+"""Batched multi-plan, multi-resolution QoS serving on the compiled engine.
 
 ``HeteroServer`` turns the jit-once engine (``repro.core.executor``) into a
 serving system: dynamic batching into padded, pre-warmed bucket shapes,
-several networks' plans resident at once, async submit/future dispatch, and
+per-(network, resolution, priority) lanes with an earliest-deadline-first
+flush policy, several networks' plans resident at once, prepared-parameter
+hot-swap without draining, async submit/future dispatch, and per-lane
 p50/p99/throughput metrics.  See ``server.py`` for the guarantees.
 """
-from repro.serving.batcher import (DEFAULT_BUCKETS, DynamicBatcher, Request,
+from repro.serving.batcher import (DEFAULT_BUCKETS, DEFAULT_PRIORITY,
+                                   DynamicBatcher, LaneKey, Request,
                                    pad_batch, pick_bucket)
 from repro.serving.metrics import ServerMetrics, percentile
-from repro.serving.server import HeteroServer
+from repro.serving.server import HeteroServer, lane_label
 
-__all__ = ["DEFAULT_BUCKETS", "DynamicBatcher", "HeteroServer", "Request",
-           "ServerMetrics", "pad_batch", "percentile", "pick_bucket"]
+__all__ = ["DEFAULT_BUCKETS", "DEFAULT_PRIORITY", "DynamicBatcher",
+           "HeteroServer", "LaneKey", "Request", "ServerMetrics",
+           "lane_label", "pad_batch", "percentile", "pick_bucket"]

@@ -2,7 +2,9 @@
 
 One ``ServerMetrics`` per ``HeteroServer``; the drain loop records a sample
 per completed request (end-to-end: enqueue -> result ready) and a sample
-per flushed batch.  ``snapshot`` is safe to call from any thread.
+per flushed batch, tagged with the batch's lane (network @ resolution /
+priority) so the snapshot reports per-lane p50/p99 next to the server-wide
+numbers.  ``snapshot`` is safe to call from any thread.
 """
 from __future__ import annotations
 
@@ -25,11 +27,14 @@ def percentile(values, q: float) -> float:
 
 
 class ServerMetrics:
-    """Thread-safe counters and a bounded latency reservoir."""
+    """Thread-safe counters and bounded latency reservoirs (one server-wide,
+    one per lane)."""
 
-    def __init__(self, reservoir: int = 8192):
+    def __init__(self, reservoir: int = 8192, lane_reservoir: int = 2048):
         self._lock = threading.Lock()
         self._lat = deque(maxlen=reservoir)      # seconds, per request
+        self._lane_reservoir = lane_reservoir
+        self._lanes: dict[str, dict] = {}        # label -> {lat, completed}
         self.submitted = 0
         self.completed = 0
         self.failed = 0
@@ -38,6 +43,7 @@ class ServerMetrics:
         self.size_flushes = 0                    # flushed by a full bucket
         self.padded_slots = 0                    # bucket slots wasted on pad
         self.recompiles = 0                      # stale-engine recoveries
+        self.swaps = 0                           # prepared-param hot-swaps
         self._t_first = None
         self._t_last = None
 
@@ -48,7 +54,8 @@ class ServerMetrics:
                 self._t_first = now
 
     def record_batch(self, n_real: int, bucket: int, latencies,
-                     by_deadline: bool, now: float | None = None):
+                     by_deadline: bool, now: float | None = None,
+                     lane: str | None = None):
         with self._lock:
             self.batches += 1
             self.completed += n_real
@@ -58,6 +65,13 @@ class ServerMetrics:
             else:
                 self.size_flushes += 1
             self._lat.extend(latencies)
+            if lane is not None:
+                st = self._lanes.setdefault(
+                    lane, {"lat": deque(maxlen=self._lane_reservoir),
+                           "completed": 0, "batches": 0})
+                st["lat"].extend(latencies)
+                st["completed"] += n_real
+                st["batches"] += 1
             self._t_last = now
 
     def record_failure(self, n: int = 1):
@@ -68,9 +82,15 @@ class ServerMetrics:
         with self._lock:
             self.recompiles += 1
 
+    def record_swap(self):
+        with self._lock:
+            self.swaps += 1
+
     def snapshot(self) -> dict:
         with self._lock:
             lat = list(self._lat)
+            lanes = {label: (list(st["lat"]), st["completed"], st["batches"])
+                     for label, st in self._lanes.items()}
             span = ((self._t_last - self._t_first)
                     if self._t_first is not None and self._t_last is not None
                     else 0.0)
@@ -83,9 +103,15 @@ class ServerMetrics:
                 "size_flushes": self.size_flushes,
                 "padded_slots": self.padded_slots,
                 "recompiles": self.recompiles,
+                "swaps": self.swaps,
                 "throughput_rps": (self.completed / span if span > 0
                                    else float("nan")),
             }
         out["p50_ms"] = percentile(lat, 50) * 1e3 if lat else float("nan")
         out["p99_ms"] = percentile(lat, 99) * 1e3 if lat else float("nan")
+        out["lanes"] = {
+            label: {"completed": completed, "batches": batches,
+                    "p50_ms": percentile(ls, 50) * 1e3,
+                    "p99_ms": percentile(ls, 99) * 1e3}
+            for label, (ls, completed, batches) in lanes.items()}
         return out

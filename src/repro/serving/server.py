@@ -1,44 +1,60 @@
-"""HeteroServer: batched multi-plan serving on the compiled engine.
+"""HeteroServer: batched multi-plan, multi-resolution QoS serving.
 
 The deployment half of the paper's argument: per-layer FPGA-GPU gains only
 matter if the serving loop preserves them.  ``HeteroServer`` keeps one
 compiled engine per registered (modules, plans) pair resident — SqueezeNet,
 MobileNetV2 and ShuffleNetV2 plans simultaneously, keyed by the PR-1 plan
-signature — admits single-image requests into a dynamic batcher, and
-dispatches padded bucket-sized batches from a background drain thread.
+signature — admits single-image requests into a multi-lane dynamic batcher,
+and dispatches padded bucket-sized batches from a background drain thread.
 
     server = HeteroServer(buckets=(1, 4, 8, 32), max_wait_ms=2.0,
                           in_flight=4)
-    server.register("mbv2", mods, plans, params, input_hw=(96, 96))
+    server.register("mbv2", mods, plans, params,
+                    input_hw=[(96, 96), (64, 64)])    # one lane set per res
     with server:                        # starts the drain loop
-        fut = server.submit("mbv2", image)        # returns immediately
-        logits = fut.result()                     # de-batched row
+        fut = server.submit("mbv2", image)            # returns immediately
+        hot = server.submit("mbv2", image, priority=0)   # deadline-critical
+        logits = fut.result()                         # de-batched row
 
-``in_flight`` is the dispatch depth.  At 1 (the pre-pipelining behaviour)
-the drain loop host-blocks on every batch: pad, compute, de-batch, repeat —
-fully serialized.  At k > 1 the drain loop leans on JAX's async dispatch
-and submits batches without ``block_until_ready()``, gating only on the
-(k-1)-th oldest unfinished computation BEFORE the next dispatch; a
-completion thread blocks on results in FIFO order, de-batches, and
-resolves futures as they land.  So padding and de-batching of
-neighbouring batches overlap device compute instead of gating it, and
-per-request ordering is preserved by construction (single dispatcher,
-single FIFO completion queue).  k = 2 keeps computations serialized and
-overlaps only host work (pad of batch i+1, de-batch of batch i-1, future
-resolution) with batch i's compute; k > 2 additionally admits concurrent
-computations — a win where per-op parallelism cannot fill the hardware
-(small feature maps, depthwise-heavy nets, genuinely distinct devices)
-and a cache-thrashing wash on large maps that already saturate a shared
-host (measured in ``benchmarks/run.py pipeline``).  Dispatched batch
-buffers are donated to the engine (the drain loop owns them and never
-reads them back): one input copy saved per batch.
+**Multi-resolution lanes.**  ``register(..., input_hw=...)`` accepts one
+(H, W) or a list of them; every (network, resolution, priority) triple is
+its own batching lane, so batches never mix input shapes and each
+(resolution, bucket) pair is a separately warmed resident jit trace —
+compiled programs for all registered resolutions stay resident
+side-by-side.  ``submit`` infers the lane from the image's shape.
+
+**Priority lanes.**  ``submit(..., priority=0)`` routes to the
+deadline-critical lane: its deadline is a fraction (default 1/4) of the
+bulk max-wait, so urgent requests preempt bulk traffic at flush time,
+while deadline flushes stay earliest-deadline-first overall — the
+starvation guard that keeps every bulk lane's wait bounded even under a
+saturated high-priority lane (``repro.serving.batcher``).
+
+**In-flight-aware admission.**  Deadline flushes are gated on downstream
+occupancy: while ``in_flight`` batches are still unfinished, a partial
+bucket would only queue behind them, so the batcher keeps accumulating
+(up to a hard deadline) and flushes a fuller batch when a slot frees.
+Full buckets are never deferred.
+
+**Prepared-parameter hot-swap.**  ``swap_params(net, params)`` prepares
+the new weights on a shadow handle (the expensive half, outside the
+server lock; serialized against stale-engine recompiles)
+and then atomically redirects dispatch to it — the queue is never
+drained.  Batches already dispatched finish on the old parameter
+generation; every batch flushed after the swap returns uses the new one
+(``repro.core.executor.PreparedParams`` stamps the generation, and
+``stats()``/``metrics`` record the swap).  Bit-match contract across a
+swap: every served row equals a batch-1 engine call under exactly ONE
+parameter generation — generations never mix inside a batch, and requests
+submitted after ``swap_params`` returns are guaranteed the new one.
 
 Guarantees:
   * results are bit-identical to ``compile_network`` called one request at
     a time — the engine is batch-invariant, padding rows are inert, and
-    neither donation nor in-flight depth changes any computed value;
-  * every bucket shape is compile-warmed at register time, so no live
-    request pays a jit trace;
+    neither donation, in-flight depth, lane, nor priority changes any
+    computed value;
+  * every (bucket, resolution) shape is compile-warmed at register time,
+    so no live request pays a jit trace;
   * a ``clear_cache()`` in ``repro.core.executor`` does not break a live
     server: the drain loop notices the stale engine and transparently
     recompiles (counted in ``stats()['recompiles']``).
@@ -58,13 +74,35 @@ import numpy as np
 
 from repro.core.executor import compile_network, compile_pipelined
 from repro.core.hetero import init_network
-from repro.serving.batcher import (DEFAULT_BUCKETS, DynamicBatcher, Request,
+from repro.serving.batcher import (DEFAULT_BUCKETS, DEFAULT_PRIORITY,
+                                   DynamicBatcher, LaneKey, Request,
                                    pad_batch, pick_bucket)
 from repro.serving.metrics import ServerMetrics
 
 
+def _normalize_resolutions(input_hw) -> tuple:
+    """Accept a single (H, W) pair or an iterable of pairs."""
+    hw = tuple(input_hw)
+    if hw and all(isinstance(v, int) for v in hw):
+        hw = (hw,)
+    res = tuple(tuple(int(v) for v in r) for r in hw)
+    if not res or any(len(r) != 2 for r in res):
+        raise ValueError(f"input_hw must be (H, W) or a list of (H, W) "
+                         f"pairs, got {input_hw!r}")
+    if len(set(res)) != len(res):
+        raise ValueError(f"duplicate resolutions in input_hw: {input_hw!r}")
+    return res
+
+
+def lane_label(lane: LaneKey) -> str:
+    """Human-readable lane name for the metrics snapshot."""
+    res = "x".join(str(v) for v in lane.res) if lane.res else "?"
+    return f"{lane.network}@{res}/p{lane.priority}"
+
+
 class _Entry:
-    """One registered network: engine + prepared params + bucket policy."""
+    """One registered network: engine + prepared params + bucket policy +
+    the set of admitted input resolutions."""
 
     def __init__(self, name, mods, plans, params, input_hw, buckets,
                  use_pallas, calib_x=None, pipelined=False):
@@ -72,7 +110,7 @@ class _Entry:
         self.mods = mods
         self.plans = plans
         self.params = params
-        self.input_hw = tuple(input_hw)
+        self.resolutions = _normalize_resolutions(input_hw)
         self.buckets = tuple(sorted(buckets))
         self.use_pallas = use_pallas
         self.calib_x = calib_x
@@ -85,23 +123,41 @@ class _Entry:
                 f"— register(..., calib_x=batch) is required")
         self.prepared = self.engine.prepare(params, calib_x)
         self.c_in = mods[0].nodes[0].spec.c_in
+        # serializes swap_params against refresh: a stale-engine recompile
+        # must never finish AFTER a swap it started BEFORE and silently
+        # revert the served parameters to the pre-swap generation
+        self.swap_lock = threading.Lock()
 
-    def input_shape(self, batch: int) -> tuple:
-        return (batch, *self.input_hw, self.c_in)
+    def input_shape(self, batch: int, res: tuple | None = None) -> tuple:
+        return (batch, *(res or self.resolutions[0]), self.c_in)
+
+    def match_res(self, shape: tuple) -> tuple | None:
+        """The registered resolution an (H, W, C) image shape belongs to."""
+        for r in self.resolutions:
+            if tuple(shape) == (*r, self.c_in):
+                return r
+        return None
 
     def warmup(self) -> dict:
         # warm the donating variant: it is what the dispatch path calls
         return self.engine.warmup(
-            self.prepared, [self.input_shape(b) for b in self.buckets],
+            self.prepared,
+            [self.input_shape(b, r)
+             for r in self.resolutions for b in self.buckets],
             donate=True)
 
     def refresh(self):
         """Re-acquire the engine after an executor cache clear (re-running
-        calibration from the stored batch when the plans need it)."""
-        self.engine = self._compile(self.mods, self.plans,
-                                    use_pallas=self.use_pallas)
-        self.prepared = self.engine.prepare(self.params, self.calib_x)
-        self.warmup()
+        calibration from the stored batch when the plans need it).  Keeps
+        the CURRENT params, and holds ``swap_lock`` end to end so a
+        concurrent ``swap_params`` either completes before the recompile
+        reads ``self.params`` or lands after it — a hot-swap that raced
+        the clear always survives."""
+        with self.swap_lock:
+            self.engine = self._compile(self.mods, self.plans,
+                                        use_pallas=self.use_pallas)
+            self.prepared = self.engine.prepare(self.params, self.calib_x)
+            self.warmup()
 
 
 class HeteroServer:
@@ -124,6 +180,10 @@ class HeteroServer:
             queue.Queue() if self.in_flight > 1 else None)
         # async results the dispatcher has not yet gated on (depth window)
         self._outstanding: list = []
+        # dispatched-but-uncompleted batch count: the admission signal the
+        # batcher's deadline deferral reads (downstream occupancy)
+        self._inflight_batches = 0
+        self._inflight_lock = threading.Lock()
         self._stop = threading.Event()
         self._lock = threading.Lock()
 
@@ -135,6 +195,9 @@ class HeteroServer:
                  pipelined: bool = False) -> dict:
         """Compile, prepare and bucket-warm a network under ``name``.
 
+        ``input_hw`` is one (H, W) pair or a list of them: every listed
+        resolution gets its own batching lanes and its own warmed jit
+        traces, resident side-by-side (``submit`` routes by image shape).
         ``buckets`` overrides the server-wide bucket ladder (per-network
         policy: e.g. cap a cache-thrashing workload at batch 8).
         ``calib_x`` is the calibration batch for plans that freeze
@@ -144,7 +207,7 @@ class HeteroServer:
         never share an engine.  ``pipelined=True`` serves through the
         stage-pipelined engine (bit-identical results; device hand-offs
         exposed for overlap).  Returns the engine's exec stats after
-        warm-up (one trace per bucket)."""
+        warm-up (one trace per bucket x resolution)."""
         if params is None:
             params = init_network(mods, jax.random.PRNGKey(0))
         if use_pallas is None:
@@ -160,6 +223,38 @@ class HeteroServer:
     def networks(self) -> list[str]:
         with self._lock:
             return list(self._entries)
+
+    def swap_params(self, name: str, params, *, calib_x=None) -> dict:
+        """Hot-swap a registered network's weights without draining.
+
+        The new parameters are prepared on a shadow handle first (weight
+        quantization + optional re-calibration — the expensive half runs
+        outside the server lock, so live traffic keeps flowing on the old
+        generation), then dispatch is atomically redirected.  In-flight
+        batches finish on the old generation; every batch flushed after
+        this returns uses the new one.  The entry's ``swap_lock``
+        serializes this against concurrent swaps and against stale-engine
+        ``refresh`` recompiles, so a recompile that raced the swap can
+        never revert it.  ``calib_x`` defaults to the batch stored at
+        register time (calibrated plans re-freeze their scales against
+        the new weights).  Returns the new generation stamp."""
+        with self._lock:
+            entry = self._entries.get(name)
+        if entry is None:
+            raise KeyError(f"unregistered network {name!r}; "
+                           f"registered: {self.networks()}")
+        with entry.swap_lock:
+            cal = calib_x if calib_x is not None else entry.calib_x
+            prepared = entry.engine.prepare(params, cal)  # shadow prepare
+            with self._lock:
+                entry.params = params
+                if calib_x is not None:
+                    entry.calib_x = calib_x
+                old_gen = entry.prepared.generation
+                entry.prepared = prepared                 # atomic redirect
+        self.metrics.record_swap()
+        return {"network": name, "generation": prepared.generation,
+                "previous_generation": old_gen}
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -192,14 +287,14 @@ class HeteroServer:
             # a later shutdown() retries the join
             return
         self._thread = None
-        for name, reqs in self._batcher.drain_all():
+        for lane, reqs in self._batcher.drain_all():
             reqs = [r for r in reqs if r.network != "__wake__"]
             if not reqs:
                 continue
             # a backlog can exceed the largest bucket — flush in chunks
-            cap = self._caps.get(name, self.buckets)[-1]
+            cap = self._caps.get(lane.network, self.buckets)[-1]
             for i in range(0, len(reqs), cap):
-                self._flush(name, reqs[i:i + cap], by_deadline=True)
+                self._flush(lane, reqs[i:i + cap], by_deadline=True)
         if self._cthread is not None:
             self._completions.put(None)                # completion sentinel
             self._cthread.join(timeout)
@@ -213,53 +308,75 @@ class HeteroServer:
 
     # -- request path ------------------------------------------------------
 
-    def submit(self, name: str, x):
+    def submit(self, name: str, x, *, priority: int = DEFAULT_PRIORITY):
         """Admit one image; returns a ``concurrent.futures.Future`` whose
-        result is that request's logits row."""
+        result is that request's logits row.  The image's (H, W) picks the
+        resolution lane; ``priority <= 0`` routes to the deadline-critical
+        lane (shorter flush deadline), larger values are bulk traffic."""
         with self._lock:
             entry = self._entries.get(name)
         if entry is None:
             raise KeyError(f"unregistered network {name!r}; "
                            f"registered: {self.networks()}")
         x = np.asarray(x) if not hasattr(x, "shape") else x
-        if tuple(x.shape) == entry.input_shape(1):
-            x = x[0]
-        want = entry.input_shape(1)[1:]
-        if tuple(x.shape) != want:
-            raise ValueError(f"{name}: expected image of shape {want} "
-                             f"(or (1, *shape)), got {tuple(x.shape)}")
-        req = Request(name, x)
+        shape = tuple(x.shape)
+        if len(shape) == 4 and shape[0] == 1:
+            x, shape = x[0], shape[1:]
+        res = entry.match_res(shape)
+        if res is None:
+            want = [entry.input_shape(1, r)[1:] for r in entry.resolutions]
+            raise ValueError(f"{name}: expected an image of shape "
+                             f"{' or '.join(map(str, want))} "
+                             f"(or with a leading batch-1 axis), "
+                             f"got {shape}")
+        req = Request(name, x, res=res, priority=int(priority))
         self.metrics.record_submit(now=time.monotonic())
         self._batcher.put(req)
         return req.future
 
-    def submit_many(self, name: str, images) -> list:
-        return [self.submit(name, x) for x in images]
+    def submit_many(self, name: str, images, *,
+                    priority: int = DEFAULT_PRIORITY) -> list:
+        return [self.submit(name, x, priority=priority) for x in images]
 
     # -- drain loop --------------------------------------------------------
+
+    def _inflight(self) -> int:
+        with self._inflight_lock:
+            return self._inflight_batches
+
+    def _inflight_add(self, d: int) -> None:
+        with self._inflight_lock:
+            self._inflight_batches += d
+
+    def _can_dispatch(self) -> bool:
+        """Downstream admission signal for the batcher: False while the
+        dispatch window is fully occupied (a deadline flush would only
+        queue behind in-flight batches — keep accumulating instead)."""
+        return self._inflight() < self.in_flight
 
     def _drain_loop(self) -> None:
         while not self._stop.is_set():
             got = self._batcher.wait_ready(timeout=0.05,
-                                           buckets_by=self._caps)
+                                           buckets_by=self._caps,
+                                           can_dispatch=self._can_dispatch)
             if got is None:
                 continue
-            name, reqs, by_deadline = got
+            lane, reqs, by_deadline = got
             reqs = [r for r in reqs if r.network != "__wake__"]
             if reqs:
-                self._flush(name, reqs, by_deadline)
+                self._flush(lane, reqs, by_deadline)
 
-    def _flush(self, name: str, reqs, by_deadline: bool) -> None:
-        """Dispatch one batch.  At in_flight == 1 this also completes it
-        inline (the fully-serialized pre-pipelining loop); otherwise the
-        async result is handed to the completion thread and this thread
-        immediately returns to batching — padding of batch i+1 overlaps
-        device compute of batch i."""
+    def _flush(self, lane: LaneKey, reqs, by_deadline: bool) -> None:
+        """Dispatch one single-lane batch.  At in_flight == 1 this also
+        completes it inline (the fully-serialized pre-pipelining loop);
+        otherwise the async result is handed to the completion thread and
+        this thread immediately returns to batching — padding of batch i+1
+        overlaps device compute of batch i."""
         with self._lock:
-            entry = self._entries.get(name)
+            entry = self._entries.get(lane.network)
         if entry is None:                     # unregistered mid-flight
             for r in reqs:
-                r.future.set_exception(KeyError(name))
+                r.future.set_exception(KeyError(lane.network))
             self.metrics.record_failure(len(reqs))
             return
         try:
@@ -267,6 +384,9 @@ class HeteroServer:
                 # executor cache was cleared under us: rebuild, stay live
                 entry.refresh()
                 self.metrics.record_recompile()
+            # one snapshot per batch: a concurrent swap_params lands either
+            # wholly before or wholly after this batch, never inside it
+            prepared = entry.prepared
             bucket = pick_bucket(len(reqs), entry.buckets)
             xb = pad_batch([r.x for r in reqs], bucket)
             if self._completions is not None:
@@ -278,21 +398,23 @@ class HeteroServer:
                     jax.block_until_ready(self._outstanding.pop(0))
             # xb is drain-loop-owned and never read after dispatch: donate
             # its buffer (exec_stats counts the copies saved)
-            out = entry.engine(entry.prepared, xb, donate=True)
+            out = entry.engine(prepared, xb, donate=True)
+            self._inflight_add(1)
             if self._completions is not None:
                 self._outstanding.append(out)
-                self._completions.put((reqs, bucket, by_deadline, out))
+                self._completions.put((lane, reqs, bucket, by_deadline, out))
             else:
-                self._complete(reqs, bucket, by_deadline, out)
+                self._complete(lane, reqs, bucket, by_deadline, out)
         except Exception as e:                # pragma: no cover - defensive
             for r in reqs:
                 if not r.future.done():
                     r.future.set_exception(e)
             self.metrics.record_failure(len(reqs))
 
-    def _complete(self, reqs, bucket: int, by_deadline: bool, out) -> None:
+    def _complete(self, lane: LaneKey, reqs, bucket: int, by_deadline: bool,
+                  out) -> None:
         """Resolve one dispatched batch: block until the device result
-        lands, de-batch, fulfil futures."""
+        lands, de-batch, fulfil futures, release the admission slot."""
         try:
             jax.block_until_ready(out)
             # one host copy, then de-batch as numpy views — per-row device
@@ -303,12 +425,15 @@ class HeteroServer:
             for i, r in enumerate(reqs):
                 r.future.set_result(rows[i])
             self.metrics.record_batch(len(reqs), bucket, lats, by_deadline,
-                                      now=now)
+                                      now=now, lane=lane_label(lane))
         except Exception as e:                # pragma: no cover - defensive
             for r in reqs:
                 if not r.future.done():
                     r.future.set_exception(e)
             self.metrics.record_failure(len(reqs))
+        finally:
+            self._inflight_add(-1)
+            self._batcher.kick()    # a slot freed: deferred flushes re-check
 
     def _completion_loop(self) -> None:
         """FIFO completion path (in_flight > 1): batches resolve in
@@ -328,8 +453,12 @@ class HeteroServer:
             engines = {name: {**e.engine.exec_stats(),
                               "current": e.engine.is_current(),
                               "pipelined": e.pipelined,
-                              "buckets": e.buckets}
+                              "buckets": e.buckets,
+                              "resolutions": e.resolutions,
+                              "param_generation": e.prepared.generation}
                        for name, e in self._entries.items()}
         return {"server": self.metrics.snapshot(),
-                "in_flight": self.in_flight, "engines": engines,
+                "in_flight": self.in_flight,
+                "inflight_batches": self._inflight(),
+                "engines": engines,
                 "executor_cache": cache_stats()}

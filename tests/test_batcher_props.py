@@ -1,0 +1,105 @@
+"""Property-based batcher tests: random interleavings of submits across
+networks, resolutions and priorities — with drains interleaved at random
+points — never lose, duplicate, or reorder a request within its lane, and
+every flushed group fits a valid bucket-ladder entry.
+
+Optional suite: skips cleanly when hypothesis is absent (the ``property``
+extra), like the other property-based files.  Also part of the
+``pytest -m serving`` stress job.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.serving import DynamicBatcher, LaneKey, Request, pick_bucket
+
+LADDERS = {"a": (1, 4, 8), "b": (2, 8)}
+
+# one submit: (network, resolution, priority); "drain" pops one group
+_submit = st.tuples(st.sampled_from(sorted(LADDERS)),
+                    st.sampled_from([(8, 8), (16, 16)]),
+                    st.integers(min_value=0, max_value=2))
+_ops = st.lists(st.one_of(_submit, st.just("drain")), max_size=80)
+
+
+def _drain_one(b, groups):
+    got = b.wait_ready(timeout=0.1, buckets_by=LADDERS)
+    assert got is not None, "pending requests but nothing flushable"
+    lane, reqs, _by_deadline = got
+    assert reqs, "empty flush group"
+    groups.append((lane, reqs))
+
+
+@pytest.mark.serving
+@settings(max_examples=60, deadline=None)
+@given(ops=_ops)
+def test_random_interleavings_exactly_once_in_lane_order(ops):
+    # max_wait_s=0 makes every lane instantly deadline-eligible, so the
+    # scheduling policy (EDF + full-bucket preemption) is exercised on
+    # every drain without wall-clock sleeps
+    b = DynamicBatcher(max_wait_s=0.0, max_batch=8)
+    submitted, groups = [], []
+    for op in ops:
+        if op == "drain":
+            if b.pending():
+                _drain_one(b, groups)
+            continue
+        net, res, prio = op
+        r = Request(net, len(submitted), res=res, priority=prio)
+        submitted.append(r)
+        b.put(r)
+    while b.pending():
+        _drain_one(b, groups)
+    flushed = [r for _lane, reqs in groups for r in reqs]
+    # no request lost, none duplicated (identity by unique sequence id)
+    assert sorted(r.x for r in flushed) == list(range(len(submitted)))
+    for lane, reqs in groups:
+        # a group never mixes lanes...
+        assert all(r.lane == lane for r in reqs)
+        # ...and always fits a valid ladder entry
+        ladder = LADDERS[lane.network]
+        assert len(reqs) <= min(b.max_batch, ladder[-1])
+        assert pick_bucket(len(reqs), ladder) in ladder
+    # within every lane, flush order preserves submission order
+    for lane in {r.lane for r in submitted}:
+        got = [r.x for _l, reqs in groups if _l == lane for r in reqs]
+        want = [r.x for r in submitted if r.lane == lane]
+        assert got == want
+
+
+@pytest.mark.serving
+@settings(max_examples=40, deadline=None)
+@given(counts=st.lists(st.integers(min_value=1, max_value=20),
+                       min_size=1, max_size=6),
+       ladder=st.sampled_from([(1, 4, 8), (2, 8), (1, 4, 8, 32), (4,)]))
+def test_deadline_take_always_yields_valid_buckets(counts, ladder):
+    """The pad-vs-split sizing never exceeds the ladder cap, always makes
+    progress, and always lands on a real bucket."""
+    for n in counts:
+        n = min(n, ladder[-1])
+        take = DynamicBatcher._deadline_take(n, ladder)
+        assert 1 <= take <= n
+        cover = pick_bucket(take, ladder)
+        assert cover in ladder
+        # the split rule's promise: at most half the covering bucket is
+        # pad — unless every queued request was taken (nothing to split
+        # to: no smaller bucket exists below n)
+        assert cover - take <= cover // 2 or take == n
+
+
+@pytest.mark.serving
+@settings(max_examples=40, deadline=None)
+@given(prios=st.lists(st.integers(min_value=0, max_value=3),
+                      min_size=2, max_size=12))
+def test_drain_all_returns_every_lane_exactly_once(prios):
+    b = DynamicBatcher(max_wait_s=10.0, max_batch=8)
+    for i, p in enumerate(prios):
+        b.put(Request("n", i, res=(8, 8), priority=p))
+    out = b.drain_all()
+    assert b.pending() == 0
+    assert {lane for lane, _ in out} \
+        == {LaneKey("n", (8, 8), p) for p in prios}
+    assert sorted(r.x for _lane, reqs in out for r in reqs) \
+        == list(range(len(prios)))

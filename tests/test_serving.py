@@ -183,7 +183,7 @@ def test_submit_validates_network_and_shape():
     with pytest.raises(KeyError, match="unregistered"):
         server.submit("nope", jnp.zeros((8, 8, 16)))
     server.register("f", [fire("f", 8, 16, 4, 8)], None, input_hw=(8, 8))
-    with pytest.raises(ValueError, match="expected image"):
+    with pytest.raises(ValueError, match="expected an image"):
         server.submit("f", jnp.zeros((8, 8, 4)))
 
 

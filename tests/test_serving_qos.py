@@ -1,0 +1,401 @@
+"""Multi-resolution QoS serving: lane scheduling policy (EDF deadline
+flushes, priority preemption, starvation guard, in-flight-aware admission),
+multi-resolution registration/bit-match, prepared-parameter hot-swap, and
+the threaded stress suite (``pytest -m serving`` is the CI stress job)."""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.executor import clear_cache, compile_network
+from repro.core.graph import fire
+from repro.core.hetero import init_network
+from repro.serving import DynamicBatcher, HeteroServer, Request
+
+HW8, HW12 = (8, 8), (12, 12)
+
+
+def _images(n, hw, c=16, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), n)
+    return [0.5 * jax.random.normal(k, (*hw, c)) for k in ks]
+
+
+def _mods():
+    return [fire("f", 8, 16, 4, 8)]
+
+
+# --- batcher policy: lanes, priorities, deadlines ---------------------------
+
+def test_lanes_are_per_network_resolution_priority():
+    b = DynamicBatcher(max_wait_s=0.0, max_batch=8)
+    specs = [("a", HW8, 0), ("a", HW8, 1), ("a", HW12, 1), ("b", HW8, 1)]
+    for i, (net, res, prio) in enumerate(specs):
+        b.put(Request(net, i, res=res, priority=prio))
+        b.put(Request(net, 100 + i, res=res, priority=prio))
+    seen = set()
+    while b.pending():
+        lane, reqs, _ = b.wait_ready(timeout=0.1)
+        assert all(r.lane == lane for r in reqs)   # groups never mix lanes
+        assert [r.x % 100 for r in reqs] == sorted(r.x % 100 for r in reqs)
+        seen.add((lane.network, lane.res, lane.priority))
+    assert seen == set(specs)
+
+
+def test_high_priority_preempts_at_deadline():
+    """Priority <= 0 lanes carry a shorter deadline, so a later-submitted
+    urgent request flushes before earlier bulk traffic (EDF)."""
+    b = DynamicBatcher(max_wait_s=0.04, max_batch=8)
+    b.put(Request("n", "bulk", res=HW8, priority=1))
+    time.sleep(0.002)
+    b.put(Request("n", "hot", res=HW8, priority=0))
+    lane, reqs, by_deadline = b.wait_ready(timeout=1.0)
+    assert lane.priority == 0 and by_deadline and reqs[0].x == "hot"
+    lane2, reqs2, _ = b.wait_ready(timeout=1.0)
+    assert lane2.priority == 1 and reqs2[0].x == "bulk"
+
+
+def test_overdue_bulk_beats_full_high_bucket():
+    """The starvation guard: an overdue bulk lane flushes ahead of a full
+    high-priority bucket — saturating the high lane cannot starve bulk."""
+    b = DynamicBatcher(max_wait_s=0.01, max_batch=4)
+    b.put(Request("n", "bulk", res=HW8, priority=1))
+    time.sleep(0.015)                              # bulk is now overdue
+    for i in range(4):                             # fresh full high bucket
+        b.put(Request("n", f"hot{i}", res=HW8, priority=0))
+    lane, reqs, by_deadline = b.wait_ready(timeout=1.0)
+    assert lane.priority == 1 and by_deadline and reqs[0].x == "bulk"
+    lane2, reqs2, by_deadline2 = b.wait_ready(timeout=1.0)
+    assert lane2.priority == 0 and not by_deadline2 and len(reqs2) == 4
+
+
+def test_full_lanes_flush_highest_priority_first():
+    b = DynamicBatcher(max_wait_s=10.0, max_batch=4)
+    for i in range(4):
+        b.put(Request("n", i, res=HW8, priority=1))
+    for i in range(4):
+        b.put(Request("n", i, res=HW8, priority=0))
+    assert b.wait_ready(timeout=0.1)[0].priority == 0
+    assert b.wait_ready(timeout=0.1)[0].priority == 1
+
+
+def test_deadline_flush_gated_on_downstream_occupancy():
+    """The PR 4 follow-up: with the dispatch window full, a soft-overdue
+    partial bucket keeps accumulating instead of flushing — until either
+    a slot frees (can_dispatch True) or the hard deadline passes."""
+    b = DynamicBatcher(max_wait_s=0.01, max_batch=8)
+    for i in range(2):
+        b.put(Request("n", i, res=HW8))
+    time.sleep(0.015)                              # soft-overdue
+    # window full: the deadline flush is deferred
+    assert b.wait_ready(timeout=0.005, can_dispatch=lambda: False) is None
+    # a third request rides along while deferred
+    b.put(Request("n", 2, res=HW8))
+    # window frees: flushes immediately, with the accumulated requests
+    lane, reqs, by_deadline = b.wait_ready(timeout=0.5,
+                                           can_dispatch=lambda: True)
+    assert by_deadline and len(reqs) == 3
+    # hard deadline: flushes even while the window stays full
+    b.put(Request("n", 3, res=HW8))
+    time.sleep(0.05)                               # > hard_wait_mult * soft
+    got = b.wait_ready(timeout=0.5, can_dispatch=lambda: False)
+    assert got is not None and got[2]
+
+
+def test_full_bucket_never_deferred_by_occupancy():
+    b = DynamicBatcher(max_wait_s=10.0, max_batch=4)
+    for i in range(4):
+        b.put(Request("n", i, res=HW8))
+    got = b.wait_ready(timeout=0.1, can_dispatch=lambda: False)
+    assert got is not None and len(got[1]) == 4 and not got[2]
+
+
+def test_emptied_lanes_are_pruned():
+    """Callers can mint arbitrarily many (network, res, priority) keys
+    over a long run — drained lanes must not linger in the scan set."""
+    b = DynamicBatcher(max_wait_s=0.0, max_batch=4)
+    for p in range(32):                      # 32 distinct priority lanes
+        b.put(Request("n", p, res=HW8, priority=p))
+    while b.pending():
+        assert b.wait_ready(timeout=0.1) is not None
+    assert b._queues == {}
+    b.put(Request("n", 0, res=HW8))
+    b.drain_all()
+    assert b._queues == {}
+
+
+# --- multi-resolution registration + serving --------------------------------
+
+def test_multi_resolution_serving_bitmatch_and_lane_metrics():
+    """Two resolutions resident under one name: interleaved mixed-priority
+    requests come back bit-identical to batch-1 engine calls, and the
+    snapshot reports per-lane percentiles."""
+    clear_cache()                       # fresh engine: exact trace counts
+    mods = _mods()
+    server = HeteroServer(buckets=(1, 4), max_wait_ms=3.0)
+    st = server.register("f", mods, None, input_hw=[HW8, HW12])
+    assert st["traces"] == 4                  # 2 buckets x 2 resolutions
+    eng = compile_network(mods, None)
+    prep = eng.prepare(server._entries["f"].params)
+    imgs = [(hw, x) for hw in (HW8, HW12)
+            for x in _images(3, hw, seed=sum(hw))]
+    with server:
+        futs = [(x, server.submit("f", x, priority=i % 2))
+                for i, (_hw, x) in enumerate(imgs)]
+        for x, f in futs:
+            out = f.result(timeout=60)
+            assert bool(jnp.all(out == eng(prep, x[None])[0]))
+    snap = server.metrics.snapshot()
+    assert snap["completed"] == 6 and snap["failed"] == 0
+    assert snap["lanes"]                      # per-lane p50/p99 reported
+    for lane_stats in snap["lanes"].values():
+        assert lane_stats["p99_ms"] >= lane_stats["p50_ms"] > 0
+    assert server.stats()["engines"]["f"]["resolutions"] == (HW8, HW12)
+
+
+def test_submit_routes_by_shape_and_rejects_unknown_resolution():
+    mods = _mods()
+    server = HeteroServer(buckets=(1,))
+    server.register("f", mods, None, input_hw=[HW8, HW12])
+    eng = compile_network(mods, None)
+    prep = eng.prepare(server._entries["f"].params)
+    # (1, H, W, C) squeezes into the matching lane
+    with pytest.raises(ValueError, match="expected an image"):
+        server.submit("f", jnp.zeros((10, 10, 16)))
+    with server:
+        out = server.submit("f", jnp.zeros((1, 12, 12, 16))).result(60)
+    assert bool(jnp.all(out == eng(prep, jnp.zeros((1, 12, 12, 16)))[0]))
+
+
+def test_register_rejects_malformed_resolutions():
+    with pytest.raises(ValueError, match="input_hw"):
+        HeteroServer().register("f", _mods(), None, input_hw=[(8, 8, 3)])
+    with pytest.raises(ValueError, match="duplicate"):
+        HeteroServer().register("f", _mods(), None, input_hw=[HW8, HW8])
+
+
+# --- prepared-parameter hot-swap --------------------------------------------
+
+def test_swap_params_switches_generation_without_drain():
+    mods = _mods()
+    pa = init_network(mods, jax.random.PRNGKey(0))
+    pb = init_network(mods, jax.random.PRNGKey(9))
+    server = HeteroServer(buckets=(1, 4), max_wait_ms=2.0)
+    server.register("f", mods, None, pa, input_hw=HW8)
+    eng = compile_network(mods, None)
+    prep_a, prep_b = eng.prepare(pa), eng.prepare(pb)
+    imgs = _images(6, HW8, seed=3)
+    with server:
+        before = [server.submit("f", x).result(60) for x in imgs[:3]]
+        gen0 = server.stats()["engines"]["f"]["param_generation"]
+        info = server.swap_params("f", pb)
+        after = [server.submit("f", x).result(60) for x in imgs[3:]]
+    assert info["previous_generation"] == gen0
+    assert info["generation"] > gen0
+    assert server.stats()["engines"]["f"]["param_generation"] \
+        == info["generation"]
+    for x, out in zip(imgs[:3], before):
+        assert bool(jnp.all(out == eng(prep_a, x[None])[0]))
+    for x, out in zip(imgs[3:], after):
+        assert bool(jnp.all(out == eng(prep_b, x[None])[0]))
+    # the swap is observable: the two generations really differ
+    assert not bool(jnp.all(before[0] == eng(prep_b, imgs[0][None])[0]))
+    snap = server.metrics.snapshot()
+    assert snap["swaps"] == 1 and snap["failed"] == 0
+
+
+def test_swap_params_unknown_network_raises():
+    with pytest.raises(KeyError, match="unregistered"):
+        HeteroServer().swap_params("nope", {})
+
+
+def test_param_generation_monotonic_across_clear_cache():
+    """A clear_cache recompile re-prepares on a fresh engine — the
+    generation stamp must keep counting up, never rewind or collide."""
+    mods = _mods()
+    server = HeteroServer(buckets=(1,), max_wait_ms=2.0)
+    server.register("f", mods, None, input_hw=HW8)
+    g0 = server.stats()["engines"]["f"]["param_generation"]
+    server.swap_params("f", init_network(mods, jax.random.PRNGKey(1)))
+    g1 = server.stats()["engines"]["f"]["param_generation"]
+    assert g1 > g0
+    clear_cache()
+    with server:                             # first flush forces a refresh
+        server.submit("f", np.zeros((8, 8, 16),
+                                    np.float32)).result(timeout=60)
+    assert server.metrics.snapshot()["recompiles"] == 1
+    assert server.stats()["engines"]["f"]["param_generation"] > g1
+
+
+def test_refresh_cannot_revert_completed_swap():
+    """The refresh x swap race: a stale-engine recompile that STARTED
+    before a swap must not finish after it and silently restore the
+    pre-swap weights.  The recompile is stalled at a barrier, the swap is
+    issued mid-recompile, and the final served generation must be the
+    swapped one."""
+    mods = _mods()
+    pa = init_network(mods, jax.random.PRNGKey(0))
+    pb = init_network(mods, jax.random.PRNGKey(9))
+    server = HeteroServer(buckets=(1,), max_wait_ms=2.0)
+    server.register("f", mods, None, pa, input_hw=HW8)
+    eng = compile_network(mods, None)
+    prep_b = eng.prepare(pb)
+    entry = server._entries["f"]
+    started, release = threading.Event(), threading.Event()
+    real_compile = entry._compile
+
+    def stalled_compile(*args, **kwargs):
+        started.set()
+        assert release.wait(timeout=30)
+        return real_compile(*args, **kwargs)
+
+    entry._compile = stalled_compile
+    refresher = threading.Thread(target=entry.refresh, daemon=True)
+    refresher.start()
+    assert started.wait(timeout=30)          # recompile is mid-flight
+    swapped = []
+    swapper = threading.Thread(
+        target=lambda: swapped.append(server.swap_params("f", pb)),
+        daemon=True)
+    swapper.start()                          # swap issued DURING refresh
+    time.sleep(0.05)
+    release.set()
+    refresher.join(timeout=60)
+    swapper.join(timeout=60)
+    assert swapped and not refresher.is_alive()
+    entry._compile = real_compile
+    x = _images(1, HW8, seed=4)[0]
+    with server:
+        out = server.submit("f", x).result(timeout=60)
+    # the swap must win: served rows come from pb, not the refreshed pa
+    assert bool(jnp.all(out == eng(prep_b, x[None])[0]))
+    assert server.stats()["engines"]["f"]["param_generation"] \
+        == swapped[0]["generation"]
+
+
+# --- stress suite (pytest -m serving: the CI stress job) --------------------
+
+@pytest.mark.serving
+def test_bulk_lane_bounded_under_high_priority_saturation():
+    """Deadline-flush regression guard: with the high-priority lane kept
+    saturated by a feeder thread, a lone bulk request must still flush
+    within its deadline bound instead of starving behind full buckets."""
+    mods = _mods()
+    server = HeteroServer(buckets=(1, 4), max_wait_ms=2.0)
+    server.register("f", mods, None, input_hw=HW8)
+    eng = compile_network(mods, None)
+    prep = eng.prepare(server._entries["f"].params)
+    hot = np.asarray(_images(1, HW8, seed=7)[0])
+    bulk = _images(1, HW8, seed=8)[0]
+    stop = threading.Event()
+    hi_futs = []
+
+    def feeder():
+        while not stop.is_set():
+            if server._batcher.pending() < 16:
+                hi_futs.append(server.submit("f", hot, priority=0))
+            else:
+                time.sleep(0.0002)
+
+    with server:
+        t = threading.Thread(target=feeder, daemon=True)
+        t.start()
+        time.sleep(0.05)                     # saturation established
+        t0 = time.monotonic()
+        out = server.submit("f", bulk, priority=1).result(timeout=30)
+        bulk_latency = time.monotonic() - t0
+        stop.set()
+        t.join()
+        for f in hi_futs:
+            f.result(timeout=60)
+    # deadline is 2 ms; allow generous CI-noise headroom, but far below
+    # the seconds it would take to drain the whole saturated high lane
+    assert bulk_latency < 1.0, f"bulk request starved: {bulk_latency:.3f}s"
+    assert bool(jnp.all(out == eng(prep, bulk[None])[0]))
+    snap = server.metrics.snapshot()
+    assert snap["failed"] == 0
+    assert snap["completed"] == len(hi_futs) + 1
+
+
+@pytest.mark.serving
+def test_threaded_stress_submit_swap_clear_cache():
+    """N submitter threads x clear_cache x swap_params racing: every
+    future resolves, nothing fails, and every served row bit-matches the
+    batch-1 oracle of exactly one parameter generation."""
+    mods = _mods()
+    pa = init_network(mods, jax.random.PRNGKey(0))
+    pb = init_network(mods, jax.random.PRNGKey(9))
+    server = HeteroServer(buckets=(1, 4), max_wait_ms=1.0, in_flight=2)
+    server.register("f", mods, None, pa, input_hw=[HW8, HW12])
+    eng = compile_network(mods, None)
+    preps = [eng.prepare(pa), eng.prepare(pb)]
+    n_threads, n_per = 4, 25
+    pools = {hw: [np.asarray(x) for x in _images(8, hw, seed=sum(hw))]
+             for hw in (HW8, HW12)}
+    results: list = []                       # list.append is thread-safe
+
+    def submitter(seed):
+        rng = np.random.RandomState(seed)
+        for i in range(n_per):
+            hw = HW8 if rng.rand() < 0.5 else HW12
+            x = pools[hw][rng.randint(len(pools[hw]))]
+            f = server.submit("f", x, priority=int(rng.randint(2)))
+            results.append((x, f))
+            time.sleep(0.002 * rng.rand())
+
+    with server:
+        threads = [threading.Thread(target=submitter, args=(s,))
+                   for s in range(n_threads)]
+        for t in threads:
+            t.start()
+        flip = 0
+        while any(t.is_alive() for t in threads):
+            server.swap_params("f", pb if flip % 2 == 0 else pa)
+            clear_cache()
+            flip += 1
+            time.sleep(0.005)
+        for t in threads:
+            t.join()
+        # force one post-clear flush so the recompile path provably ran
+        clear_cache()
+        final = server.submit("f", pools[HW8][0]).result(timeout=60)
+        rows = [(x, f.result(timeout=120)) for x, f in results]
+    refs = {}                                # cache batch-1 oracle rows
+
+    def ref_rows(x):
+        key = x.tobytes()
+        if key not in refs:
+            refs[key] = [np.asarray(eng(p, x[None])[0]) for p in preps]
+        return refs[key]
+
+    for x, out in rows:
+        assert any(np.array_equal(out, r) for r in ref_rows(x)), \
+            "served row matches neither parameter generation's oracle"
+    current = preps[0] if flip % 2 == 0 else preps[1]  # last swap applied
+    assert np.array_equal(final, np.asarray(eng(current,
+                                                pools[HW8][0][None])[0]))
+    snap = server.metrics.snapshot()
+    assert snap["failed"] == 0
+    assert snap["completed"] == n_threads * n_per + 1
+    assert snap["swaps"] == flip
+    assert snap["recompiles"] >= 1           # clear_cache recovery ran live
+
+
+@pytest.mark.serving
+def test_stress_shutdown_mid_traffic_resolves_every_future():
+    """Shutdown racing live submissions: whatever was admitted must
+    resolve (flushed by the shutdown backlog drain), never hang."""
+    mods = _mods()
+    server = HeteroServer(buckets=(1, 4), max_wait_ms=1.0, in_flight=2)
+    server.register("f", mods, None, input_hw=HW8)
+    eng = compile_network(mods, None)
+    prep = eng.prepare(server._entries["f"].params)
+    imgs = [np.asarray(x) for x in _images(12, HW8, seed=2)]
+    server.start()
+    futs = [server.submit("f", x, priority=i % 2)
+            for i, x in enumerate(imgs)]
+    server.shutdown()
+    for x, f in zip(imgs, futs):
+        assert bool(jnp.all(f.result(timeout=60) == eng(prep, x[None])[0]))
