@@ -28,6 +28,14 @@ Prints ``name,us_per_call,derived`` CSV rows:
          serve/<net>/load<m>x          offered-load point at m x batched
                                        capacity: offered_rps;rps;p50;p99
          serve/mixed/batched_burst     all plans resident, interleaved
+  faults fault-tolerant serving (§Robustness): deterministic FPGA-fault
+         injection against a live mobilenetv2 server — circuit-breaker
+         failover to the GPU-only plan and half-open probe recovery
+         (faults/<net>/failover: bitmatch/recovered/served_frac floors,
+         failover-pause p99 from inter-completion gaps) and queue-bound
+         load shedding under injected dispatch latency
+         (faults/shed: shed_rate + within_deadline floor — rejects are
+         synchronous, admitted rows all resolve)
   kernels wall-clock of the kernel reference paths on this host
   roofline per-cell dry-run roofline terms                     (§Roofline)
 
@@ -528,6 +536,119 @@ def pipeline_rows(n_req=96, res=32, batch=8):
     return rows
 
 
+def faults_rows(res=32, n_req=48):
+    """Fault-tolerant serving under deterministic injection (§Robustness).
+
+      faults/<net>/failover   a paced request stream rides through injected
+                              FPGA dispatch failures: the breaker trips,
+                              traffic fails over to the shadow-prepared
+                              GPU-only plan, half-open probes recover the
+                              hybrid plan.  Floors: bitmatch (every served
+                              row equals its batch-1 oracle on the plan
+                              that served it), recovered (breaker closed
+                              by stream end), served_frac (zero lost
+                              futures).  pause_p99_ms is the p99 of
+                              inter-completion gaps — the failover pause a
+                              client would see.
+      faults/shed             queue-bound load shedding under injected
+                              dispatch latency: rejects raise synchronous
+                              ``Overloaded``.  Floor: within_deadline
+                              (every shed raised in < 50 ms AND every
+                              admitted request resolved).
+    """
+    from repro.core.executor import compile_network
+    from repro.core.graph import NETWORKS
+    from repro.core.hetero import init_network
+    from repro.core.partitioner import partition_network
+    from repro.runtime.faults import FaultPlan, FaultRule, inject
+    from repro.serving import HeteroServer, Overloaded, percentile
+    rows = []
+    net = "mobilenetv2"
+    mods = NETWORKS[net]()
+    plans = partition_network(mods, paper_faithful=True)
+    params = init_network(mods, jax.random.PRNGKey(0))
+    imgs = [jax.random.normal(jax.random.PRNGKey(i), (res, res, 3))
+            for i in range(n_req)]
+    # oracles computed OUTSIDE the inject scope (the injection point is
+    # process-global, like the engine cache)
+    hybrid = compile_network(mods, plans)
+    h_prep = hybrid.prepare(params)
+    gpu = compile_network(mods, None)
+    g_prep = gpu.prepare(params)
+    refs_h = [hybrid(h_prep, x[None])[0] for x in imgs]
+    refs_g = [gpu(g_prep, x[None])[0] for x in imgs]
+
+    server = HeteroServer(buckets=(1, 4, 8), max_wait_ms=2.0,
+                          breaker_threshold=2, probe_interval_s=0.03,
+                          recover_after=1)
+    # prewarm: the pause metric should measure the redirect + retry, not
+    # a first-failure fallback compile
+    server.register(net, mods, plans, params, input_hw=(res, res),
+                    prewarm_fallback=True)
+    done_t = []
+    # 8 clean dispatches, then 3 FPGA faults: two trip the breaker
+    # (threshold=2, the first burns the rows' retry budget-free failover),
+    # the third fails the first half-open probe; the next probe heals
+    plan = FaultPlan([FaultRule(op="dispatch", device="fpga",
+                                after=8, times=3)])
+    with server:
+        with inject(plan):
+            futs = []
+            for x in imgs:
+                f = server.submit(net, x)
+                f.add_done_callback(
+                    lambda _f: done_t.append(time.perf_counter()))
+                futs.append(f)
+                time.sleep(0.005)       # paced: probes need wall-clock room
+            outs = [f.result(timeout=300) for f in futs]
+        recovered = (1.0 if server.stats()["engines"][net]["mode"]
+                     == "primary" else 0.0)
+    match = all(bool((out == h).all()) or bool((out == g).all())
+                for out, h, g in zip(outs, refs_h, refs_g))
+    snap = server.metrics.snapshot()
+    gaps = [b - a for a, b in zip(sorted(done_t), sorted(done_t)[1:])]
+    pause_p99 = percentile(gaps, 99) * 1e3 if gaps else 0.0
+    served_frac = snap["completed"] / max(1, snap["submitted"])
+    rows.append((f"faults/{net}/failover", pause_p99 * 1e3,
+                 f"bitmatch={1.0 if match else 0.0};"
+                 f"recovered={recovered};"
+                 f"served_frac={served_frac:.3f};"
+                 f"pause_p99_ms={pause_p99:.2f};"
+                 f"failovers={snap['failovers']};"
+                 f"recoveries={snap['recoveries']};"
+                 f"retries={snap['retries']};"
+                 f"injected={len(plan.fired)}"))
+
+    # queue-bound shedding: bucket-1 lane, depth bound 4, +20 ms injected
+    # dispatch latency — an unpaced burst must shed, and shed fast
+    server = HeteroServer(buckets=(1,), max_wait_ms=1.0, max_queue=4)
+    server.register(net, mods, None, input_hw=(res, res))
+    shed, shed_lat, admitted = 0, [], []
+    with server:
+        with inject(FaultPlan([FaultRule(op="dispatch", kind="delay",
+                                         delay_s=0.02, times=None)])):
+            for x in imgs:
+                t_s = time.perf_counter()
+                try:
+                    admitted.append(server.submit(net, x))
+                except Overloaded:
+                    shed += 1
+                    shed_lat.append(time.perf_counter() - t_s)
+            resolved = sum(1 for f in admitted
+                           if f.result(timeout=300) is not None)
+    within = (1.0 if resolved == len(admitted)
+              and all(dt < 0.050 for dt in shed_lat) else 0.0)
+    rows.append(("faults/shed", max(shed_lat, default=0.0) * 1e6,
+                 f"within_deadline={within};"
+                 f"shed_rate={shed / n_req:.3f};"
+                 f"shed={shed};admitted={len(admitted)};"
+                 f"shed_p99_us={percentile(shed_lat, 99) * 1e6:.0f}"
+                 if shed_lat else
+                 f"within_deadline={within};shed_rate=0.000;"
+                 f"shed=0;admitted={len(admitted)};shed_p99_us=0"))
+    return rows
+
+
 def kernel_bench():
     from repro.kernels.flash_attention.ref import attention
     from repro.kernels.fused_block.ref import fused_dw_pw
@@ -596,6 +717,7 @@ SECTIONS = {
     "serve": serve_rows,
     "qos": qos_rows,
     "pipeline": pipeline_rows,
+    "faults": faults_rows,
     "kernels": kernel_bench,
     "roofline": roofline_rows,
 }

@@ -63,10 +63,22 @@ from repro.core.graph import ModuleGraph
 from repro.core.lowering import lower_network
 from repro.core.passes import chain_groups
 from repro.core.schedule import Plan
+from repro.runtime import faults
 
 
 def _default_use_pallas() -> bool:
     return jax.default_backend() != "cpu"
+
+
+def plan_devices(plans: list[Plan] | None) -> tuple:
+    """The device set a (modules, plans) pair touches — ("gpu",) for the
+    all-GPU baseline.  Reported to the fault-injection site so rules
+    pinned to ``device="fpga"`` fire on hybrid engines but never on the
+    GPU-only fallback plan."""
+    devs = {"gpu"}
+    for p in plans or []:
+        devs.update(p.assign.values())
+    return tuple(sorted(devs))
 
 
 @contextmanager
@@ -170,6 +182,7 @@ class CompiledNetwork:
                  use_pallas: bool):
         self.signature = plan_signature(mods, plans, use_pallas)
         self.use_pallas = use_pallas
+        self.devices = plan_devices(plans)
         self.generation = _GENERATION[0]
         lowered = lower_network(mods, plans, use_pallas)
         self._prepare_fn = lowered.prepare      # jits its own internals
@@ -195,6 +208,7 @@ class CompiledNetwork:
         Returns a generation-stamped ``PreparedParams`` handle (the stamp
         is a process-global monotonic prepare counter — hot-swap
         bookkeeping that survives engine recompiles)."""
+        faults.trip("prepare", device=self.devices)
         tree = self._prepare_fn(params, calib_x)
         with self._stats_lock:
             self._exec["prepares"] += 1
@@ -216,6 +230,9 @@ class CompiledNetwork:
         """Run the jitted program.  ``donate=True`` donates ``x``'s buffer
         to the computation — the CALLER'S array becomes unusable after the
         call; only pass buffers you own and will not read again."""
+        # fault-injection site, BEFORE any dispatch or donation: an
+        # injected dispatch failure leaves the caller's buffer intact
+        faults.trip("dispatch", device=self.devices)
         first = ((tuple(x.shape), str(getattr(x, "dtype", "f32")), donate)
                  not in self._shapes_seen)
         self._count_call(x, donate)
@@ -270,6 +287,7 @@ class PipelinedEngine:
         self.signature = ("pipelined",) + plan_signature(mods, plans,
                                                          use_pallas)
         self.use_pallas = use_pallas
+        self.devices = plan_devices(plans)
         self.generation = _GENERATION[0]
         lowered = lower_network(mods, plans, use_pallas)
         self._prepare_fn = lowered.prepare
@@ -286,6 +304,7 @@ class PipelinedEngine:
         self._stats_lock = threading.Lock()
 
     def prepare(self, params, calib_x=None) -> PreparedParams:
+        faults.trip("prepare", device=self.devices)
         tree = self._prepare_fn(params, calib_x)
         with self._stats_lock:
             self._exec["prepares"] += 1
@@ -300,8 +319,22 @@ class PipelinedEngine:
 
     def _dispatch(self, slices, x, env, s: int):
         stage = self.stages[s]
+        # per-stage fault site: "fail stage k of batch n" is expressible,
+        # and the raised fault carries the stage's device tag so failures
+        # are attributable to the FPGA or GPU path
+        faults.trip("stage", device=stage.device, stage=s)
         xin = x if stage.needs_input else ()
-        return self._jitted[s](slices[s], xin, env)
+        try:
+            return self._jitted[s](slices[s], xin, env)
+        except Exception as e:
+            # attribute real stage failures too (best effort: some
+            # exception types reject new attributes)
+            try:
+                e.device = getattr(e, "device", None) or stage.device
+                e.stage = s
+            except AttributeError:
+                pass
+            raise
 
     def _count_call(self, x, donated_env_bytes: int) -> None:
         key = (tuple(x.shape), str(getattr(x, "dtype", "f32")))
@@ -329,6 +362,7 @@ class PipelinedEngine:
         accepted for interface parity with ``CompiledNetwork`` — the
         caller's ``x`` is never consumed either way (inter-stage donation
         is always on)."""
+        faults.trip("dispatch", device=self.devices)
         first = ((tuple(x.shape), str(getattr(x, "dtype", "f32")))
                  not in self._shapes_seen)
         slices = self._slices(prepared)

@@ -1,0 +1,6 @@
+"""Runtime robustness: deterministic fault injection (``faults``) and the
+straggler/checkpoint resilience loop (``resilience``).  Submodules are
+imported directly (``from repro.runtime import faults``) — this package
+init stays import-light so the serving hot path never pays for the
+checkpoint/training machinery.
+"""

@@ -18,22 +18,45 @@ class StragglerMonitor:
     """Flags steps slower than ``threshold`` x rolling median.
 
     At DC scale the flag feeds the scheduler (issue backup step on a spare
-    slice / evict the slow host); here it records and reports.
+    slice / evict the slow host); the serving completion loop uses
+    ``budget()`` the same way — a dispatch lagging the budget triggers a
+    watchdog event and, for pipelined entries, a backup monolithic
+    dispatch (``repro.serving.server``).  ``times`` is trimmed to the
+    rolling window so a long-lived server never grows it without bound;
+    ``flagged`` keeps at most ``window`` recent events for the same
+    reason (the aggregate count lives in ``ServerMetrics``).
     """
     threshold: float = 2.0
     window: int = 50
+    min_samples: int = 5
     times: list = field(default_factory=list)
     flagged: list = field(default_factory=list)
 
     def record(self, step: int, seconds: float) -> bool:
         self.times.append(seconds)
-        hist = self.times[-self.window:]
-        if len(hist) >= 5:
-            med = statistics.median(hist)
+        if len(self.times) > self.window:
+            del self.times[:-self.window]
+        if len(self.times) >= self.min_samples:
+            med = statistics.median(self.times)
             if seconds > self.threshold * med:
                 self.flagged.append((step, seconds, med))
+                if len(self.flagged) > self.window:
+                    del self.flagged[:-self.window]
                 return True
         return False
+
+    def median(self) -> float | None:
+        """Rolling-median step time; None until ``min_samples`` samples
+        have been recorded (no budget before there is a baseline)."""
+        if len(self.times) < self.min_samples:
+            return None
+        return statistics.median(self.times)
+
+    def budget(self) -> float | None:
+        """Straggler budget: ``threshold`` x the rolling median — the
+        wait beyond which a completion counts as lagging."""
+        med = self.median()
+        return None if med is None else self.threshold * med
 
 
 class FaultTolerantLoop:

@@ -5,14 +5,22 @@ serving system: dynamic batching into padded, pre-warmed bucket shapes,
 per-(network, resolution, priority) lanes with an earliest-deadline-first
 flush policy, several networks' plans resident at once, prepared-parameter
 hot-swap without draining, async submit/future dispatch, and per-lane
-p50/p99/throughput metrics.  See ``server.py`` for the guarantees.
+p50/p99/throughput metrics.  PR 6 adds the fault-tolerance layer: typed
+request-level errors (``errors``), per-entry circuit-breaker failover to
+the GPU-only plan, bounded dispatch retries, per-request deadlines,
+load shedding, straggler watchdog, and graceful drain.  See ``server.py``
+for the guarantees.
 """
 from repro.serving.batcher import (DEFAULT_BUCKETS, DEFAULT_PRIORITY,
                                    DynamicBatcher, LaneKey, Request,
                                    pad_batch, pick_bucket)
+from repro.serving.errors import (DeadlineExceeded, Overloaded, ServerClosed,
+                                  ServingError, Shutdown)
 from repro.serving.metrics import ServerMetrics, percentile
 from repro.serving.server import HeteroServer, lane_label
 
-__all__ = ["DEFAULT_BUCKETS", "DEFAULT_PRIORITY", "DynamicBatcher",
-           "HeteroServer", "LaneKey", "Request", "ServerMetrics",
-           "lane_label", "pad_batch", "percentile", "pick_bucket"]
+__all__ = ["DEFAULT_BUCKETS", "DEFAULT_PRIORITY", "DeadlineExceeded",
+           "DynamicBatcher", "HeteroServer", "LaneKey", "Overloaded",
+           "Request", "ServerClosed", "ServerMetrics", "ServingError",
+           "Shutdown", "lane_label", "pad_batch", "percentile",
+           "pick_bucket"]

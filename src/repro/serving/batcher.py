@@ -64,6 +64,10 @@ class Request:
     x: object                              # (H, W, C) array
     res: tuple | None = None               # input (H, W); lane component
     priority: int = DEFAULT_PRIORITY
+    deadline_s: float | None = None        # per-request deadline (from
+    #                                      # enqueue); late work is
+    #                                      # rejected with DeadlineExceeded
+    retries: int = 0                       # dispatch-failure retries spent
     future: Future = field(default_factory=Future)
     t_enqueue: float = field(default_factory=time.monotonic)
 
@@ -114,10 +118,39 @@ class DynamicBatcher:
         self._queues: dict[LaneKey, deque] = {}
         self._cond = threading.Condition()
 
-    def put(self, req: Request) -> None:
+    def put(self, req: Request, bound: int | None = None) -> bool:
+        """Enqueue one request.  ``bound`` is the lane's queue-depth limit:
+        when the lane already holds ``bound`` requests the request is NOT
+        enqueued and False is returned — the caller sheds it
+        (reject-with-backpressure) instead of buffering without bound."""
         with self._cond:
-            self._queues.setdefault(req.lane, deque()).append(req)
+            q = self._queues.setdefault(req.lane, deque())
+            if bound is not None and len(q) >= bound:
+                if not q:                   # never leave an empty stub lane
+                    del self._queues[req.lane]
+                return False
+            q.append(req)
             self._cond.notify()
+            return True
+
+    def put_front(self, reqs) -> None:
+        """Re-enqueue already-admitted requests at the HEAD of their lane,
+        preserving their order (the dispatch-failure retry path: retried
+        rows must not fall behind younger traffic in the same lane, or
+        FIFO-within-lane breaks).  Bounds do not apply — these rows were
+        admitted once already."""
+        by_lane: dict[LaneKey, list] = {}
+        for r in reqs:
+            by_lane.setdefault(r.lane, []).append(r)
+        with self._cond:
+            for lane, rs in by_lane.items():
+                self._queues.setdefault(lane, deque()).extendleft(
+                    reversed(rs))
+            self._cond.notify()
+
+    def depth(self, lane: LaneKey) -> int:
+        with self._cond:
+            return len(self._queues.get(lane, ()))
 
     def kick(self) -> None:
         """Wake the scheduler without enqueueing — called when a downstream

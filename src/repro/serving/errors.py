@@ -1,0 +1,44 @@
+"""Typed serving errors: every failure a caller can see has a name.
+
+The request-level contract is that **every future issued by ``submit``
+resolves exactly once** — with a logits row or with one of these typed
+errors — and that admission failures raise synchronously (backpressure
+the caller can act on immediately).
+"""
+from __future__ import annotations
+
+
+class ServingError(RuntimeError):
+    """Base class for all typed serving failures."""
+
+
+class ServerClosed(ServingError):
+    """``submit`` on a server that is not running: not yet started, or
+    already shut down.  Raised synchronously — no future is issued."""
+
+
+class Overloaded(ServingError):
+    """Load shed: the request's lane is at its queue-depth bound.  Raised
+    synchronously at ``submit`` (reject-with-backpressure) instead of
+    buffering without bound.  ``lane`` and ``bound`` identify the queue."""
+
+    def __init__(self, msg: str, *, lane=None, bound: int | None = None):
+        super().__init__(msg)
+        self.lane = lane
+        self.bound = bound
+
+
+class DeadlineExceeded(ServingError):
+    """The request's per-request deadline passed before its batch was
+    dispatched — late work is rejected, not served."""
+
+    def __init__(self, msg: str, *, waited_s: float = 0.0,
+                 deadline_s: float = 0.0):
+        super().__init__(msg)
+        self.waited_s = waited_s
+        self.deadline_s = deadline_s
+
+
+class Shutdown(ServingError):
+    """The server shut down before this request could be served.  Every
+    still-pending future resolves with this — a drain never hangs."""

@@ -44,6 +44,19 @@ class ServerMetrics:
         self.padded_slots = 0                    # bucket slots wasted on pad
         self.recompiles = 0                      # stale-engine recoveries
         self.swaps = 0                           # prepared-param hot-swaps
+        self.shed = 0                            # Overloaded rejections
+        self.retries = 0                         # dispatch-failure requeues
+        self.deadline_exceeded = 0               # per-request deadline misses
+        self.errors = 0                          # unexpected loop errors
+        self.failovers = 0                       # hybrid -> GPU-only swaps
+        self.recoveries = 0                      # GPU-only -> hybrid swaps
+        self.probes_ok = 0                       # half-open probes that passed
+        self.probes_failed = 0                   # half-open probes that failed
+        self.straggler_events = 0                # watchdog budget overruns
+        self.backup_dispatches = 0               # monolithic backup launches
+        self.drain_flushed = 0                   # batches served during drain
+        self.drain_aborted = 0                   # requests Shutdown-rejected
+        self.breaker_states: dict[str, str] = {}  # network -> breaker state
         self._t_first = None
         self._t_last = None
 
@@ -86,6 +99,16 @@ class ServerMetrics:
         with self._lock:
             self.swaps += 1
 
+    def count(self, name: str, n: int = 1):
+        """Increment one of the failure-state counters by attribute name
+        (``shed``, ``retries``, ``failovers``, ...)."""
+        with self._lock:
+            setattr(self, name, getattr(self, name) + n)
+
+    def set_breaker(self, network: str, state: str):
+        with self._lock:
+            self.breaker_states[network] = state
+
     def snapshot(self) -> dict:
         with self._lock:
             lat = list(self._lat)
@@ -104,6 +127,19 @@ class ServerMetrics:
                 "padded_slots": self.padded_slots,
                 "recompiles": self.recompiles,
                 "swaps": self.swaps,
+                "shed": self.shed,
+                "retries": self.retries,
+                "deadline_exceeded": self.deadline_exceeded,
+                "errors": self.errors,
+                "failovers": self.failovers,
+                "recoveries": self.recoveries,
+                "probes_ok": self.probes_ok,
+                "probes_failed": self.probes_failed,
+                "straggler_events": self.straggler_events,
+                "backup_dispatches": self.backup_dispatches,
+                "drain_flushed": self.drain_flushed,
+                "drain_aborted": self.drain_aborted,
+                "breakers": dict(self.breaker_states),
                 "throughput_rps": (self.completed / span if span > 0
                                    else float("nan")),
             }

@@ -48,6 +48,39 @@ swap: every served row equals a batch-1 engine call under exactly ONE
 parameter generation — generations never mix inside a batch, and requests
 submitted after ``swap_params`` returns are guaranteed the new one.
 
+**Failure semantics** (the PR-6 fault-tolerance contract):
+
+  * **Every future issued by ``submit`` resolves exactly once** — with a
+    logits row, or with a typed error (``repro.serving.errors``).  There
+    is no path on which an admitted request hangs: dispatch failures
+    de-batch into one bounded head-of-lane retry and then reject;
+    ``shutdown`` flushes the backlog and sweeps whatever is left with
+    ``Shutdown``.
+  * **Admission failures raise synchronously.**  ``submit`` on a server
+    that is not running raises ``ServerClosed``; a lane at its
+    queue-depth bound (``max_queue``) raises ``Overloaded``
+    (reject-with-backpressure, never unbounded buffering).
+  * **Per-request deadlines.**  ``submit(..., deadline_ms=...)``: a
+    request whose deadline passes before its batch dispatches resolves
+    with ``DeadlineExceeded`` instead of being served late.
+  * **Degraded-mode failover.**  Each entry carries a circuit breaker
+    over device-attributed dispatch failures: after
+    ``breaker_threshold`` consecutive FPGA-attributed failures the
+    server shadow-prepares the GPU-only plan for the same modules (the
+    paper's all-GPU baseline), bucket-warms it, and atomically redirects
+    live traffic to it — the ``swap_params`` mechanism generalized from
+    weight swaps to plan swaps.  While failed over, half-open probe
+    batches run on the hybrid plan every ``probe_interval_s``;
+    ``recover_after`` consecutive passes swap traffic back.  Served rows
+    always bit-match the batch-1 oracle of the plan that served them.
+  * **Straggler defense.**  The completion loop polls each dispatched
+    batch against a rolling budget (``straggler_factor`` x the entry's
+    median completion, via ``repro.runtime.resilience.StragglerMonitor``);
+    a batch past its budget counts a watchdog event and, for pipelined
+    entries, races a backup monolithic dispatch of the same batch.
+  * All of it is deterministic under ``repro.runtime.faults`` injection —
+    no hardware fault required to exercise any path in CI.
+
 Guarantees:
   * results are bit-identical to ``compile_network`` called one request at
     a time — the engine is batch-invariant, padding rows are inert, and
@@ -74,9 +107,13 @@ import numpy as np
 
 from repro.core.executor import compile_network, compile_pipelined
 from repro.core.hetero import init_network
+from repro.runtime import faults
+from repro.runtime.resilience import StragglerMonitor
 from repro.serving.batcher import (DEFAULT_BUCKETS, DEFAULT_PRIORITY,
                                    DynamicBatcher, LaneKey, Request,
                                    pad_batch, pick_bucket)
+from repro.serving.errors import (DeadlineExceeded, Overloaded, ServerClosed,
+                                  Shutdown)
 from repro.serving.metrics import ServerMetrics
 
 
@@ -100,12 +137,69 @@ def lane_label(lane: LaneKey) -> str:
     return f"{lane.network}@{res}/p{lane.priority}"
 
 
+class _Breaker:
+    """Per-network circuit breaker over FPGA-attributed dispatch failures.
+
+    closed -> open after ``threshold`` consecutive failures on the
+    primary (hybrid) plan; while open, half-open probe batches run on
+    the primary every ``probe_interval_s`` and ``recover_after``
+    consecutive passes close it again.  Not thread-safe on its own —
+    all transitions happen on the drain thread."""
+
+    def __init__(self, threshold: int = 3, probe_interval_s: float = 0.25,
+                 recover_after: int = 2):
+        self.threshold = max(1, int(threshold))
+        self.probe_interval_s = probe_interval_s
+        self.recover_after = max(1, int(recover_after))
+        self.state = "closed"
+        self.fails = 0              # consecutive primary failures
+        self.oks = 0                # consecutive half-open probe passes
+        self.last_probe = 0.0
+
+    @property
+    def label(self) -> str:
+        if self.state == "open" and self.oks > 0:
+            return "half_open"      # probing, partway to recovery
+        return self.state
+
+    def record_failure(self) -> bool:
+        """True when this failure trips (or finds) the breaker open."""
+        self.fails += 1
+        if self.fails >= self.threshold:
+            self.state = "open"
+            self.oks = 0
+        return self.state == "open"
+
+    def record_success(self) -> None:
+        self.fails = 0
+
+    def probe_due(self, now: float) -> bool:
+        return (self.state == "open"
+                and now - self.last_probe >= self.probe_interval_s)
+
+    def record_probe(self, ok: bool, now: float) -> bool:
+        """True when this probe completes recovery (breaker closes)."""
+        self.last_probe = now
+        if not ok:
+            self.oks = 0
+            return False
+        self.oks += 1
+        if self.oks >= self.recover_after:
+            self.state = "closed"
+            self.fails = self.oks = 0
+            return True
+        return False
+
+
 class _Entry:
     """One registered network: engine + prepared params + bucket policy +
-    the set of admitted input resolutions."""
+    the set of admitted input resolutions + the fault-tolerance state
+    (circuit breaker, GPU-only fallback variant, straggler monitor)."""
 
     def __init__(self, name, mods, plans, params, input_hw, buckets,
-                 use_pallas, calib_x=None, pipelined=False):
+                 use_pallas, calib_x=None, pipelined=False,
+                 breaker: _Breaker | None = None,
+                 straggler_factor: float = 4.0):
         self.name = name
         self.mods = mods
         self.plans = plans
@@ -127,6 +221,16 @@ class _Entry:
         # must never finish AFTER a swap it started BEFORE and silently
         # revert the served parameters to the pre-swap generation
         self.swap_lock = threading.Lock()
+        # failover state: "primary" serves the registered (hybrid) plans,
+        # "fallback" the GPU-only plan for the same modules
+        self.mode = "primary"
+        self.fb_engine = None               # lazily compiled GPU-only plan
+        self.fb_prepared = None
+        self.bk_engine = None               # lazy monolithic straggler backup
+        self.bk_prepared = None
+        self.breaker = breaker or _Breaker()
+        self.monitor = StragglerMonitor(threshold=straggler_factor)
+        self._seq = 0
 
     def input_shape(self, batch: int, res: tuple | None = None) -> tuple:
         return (batch, *(res or self.resolutions[0]), self.c_in)
@@ -138,36 +242,110 @@ class _Entry:
                 return r
         return None
 
+    def next_seq(self) -> int:
+        self._seq += 1
+        return self._seq
+
+    def active(self):
+        """(engine, prepared) snapshot of the live variant."""
+        if self.mode == "fallback":
+            return self.fb_engine, self.fb_prepared
+        return self.engine, self.prepared
+
+    def _warm_shapes(self) -> list:
+        return [self.input_shape(b, r)
+                for r in self.resolutions for b in self.buckets]
+
     def warmup(self) -> dict:
         # warm the donating variant: it is what the dispatch path calls
-        return self.engine.warmup(
-            self.prepared,
-            [self.input_shape(b, r)
-             for r in self.resolutions for b in self.buckets],
-            donate=True)
+        return self.engine.warmup(self.prepared, self._warm_shapes(),
+                                  donate=True)
 
-    def refresh(self):
+    def ensure_fallback(self) -> None:
+        """Shadow-prepare the GPU-only plan (the paper's all-GPU baseline):
+        compiled, prepared and bucket-warmed BEFORE any live traffic is
+        redirected to it — failover is an atomic pointer swap, not a
+        compile on the request path."""
+        if self.fb_engine is None or not self.fb_engine.is_current():
+            self.fb_engine = compile_network(self.mods, None,
+                                             use_pallas=self.use_pallas)
+            self.fb_prepared = self.fb_engine.prepare(self.params)
+            self.fb_engine.warmup(self.fb_prepared, self._warm_shapes(),
+                                  donate=True)
+
+    def failover(self) -> None:
+        with self.swap_lock:
+            self.ensure_fallback()
+            self.mode = "fallback"          # atomic redirect
+
+    def recover(self) -> None:
+        with self.swap_lock:
+            self.mode = "primary"
+
+    def probe(self, xb) -> bool:
+        """Half-open probe: one batch on the primary (hybrid) engine,
+        output discarded — live traffic keeps flowing on the fallback.
+        Dispatches a COPY through the donating path (the only variant
+        ``warmup`` traces — a non-donating call here would pay a fresh
+        jit trace mid-failover), so the caller's buffer survives for the
+        real dispatch."""
+        try:
+            out = self.engine(self.prepared, np.array(xb), donate=True)
+            jax.block_until_ready(out)
+            return True
+        except Exception:
+            return False
+
+    def ensure_backup(self):
+        """Monolithic engine over the SAME plans — the straggler backup
+        for pipelined entries (bit-identical results, no stage hand-offs
+        to stall on).  None for entries already monolithic."""
+        if not self.pipelined:
+            return None
+        if self.bk_engine is None or not self.bk_engine.is_current():
+            self.bk_engine = compile_network(self.mods, self.plans,
+                                             use_pallas=self.use_pallas)
+            self.bk_prepared = self.bk_engine.prepare(self.params,
+                                                      self.calib_x)
+        return self.bk_engine
+
+    def refresh(self) -> None:
         """Re-acquire the engine after an executor cache clear (re-running
         calibration from the stored batch when the plans need it).  Keeps
         the CURRENT params, and holds ``swap_lock`` end to end so a
         concurrent ``swap_params`` either completes before the recompile
         reads ``self.params`` or lands after it — a hot-swap that raced
-        the clear always survives."""
+        the clear always survives.  The fallback variant (if built) is
+        rebuilt too; the straggler backup rebuilds lazily."""
+        faults.trip("refresh")
         with self.swap_lock:
             self.engine = self._compile(self.mods, self.plans,
                                         use_pallas=self.use_pallas)
             self.prepared = self.engine.prepare(self.params, self.calib_x)
             self.warmup()
+            if self.fb_engine is not None:
+                self.fb_engine = None
+                self.ensure_fallback()
+            self.bk_engine = None
 
 
 class HeteroServer:
     """Async dynamic-batching server over ``repro.core.executor``."""
 
     def __init__(self, *, buckets=DEFAULT_BUCKETS, max_wait_ms: float = 2.0,
-                 use_pallas: bool | None = None, in_flight: int = 1):
+                 use_pallas: bool | None = None, in_flight: int = 1,
+                 max_queue: int = 1024, breaker_threshold: int = 3,
+                 probe_interval_s: float = 0.25, recover_after: int = 2,
+                 straggler_factor: float = 4.0,
+                 straggler_min_ms: float = 50.0):
         self.buckets = tuple(sorted(buckets))
         self.use_pallas = use_pallas
         self.in_flight = max(1, int(in_flight))
+        self.max_queue = max(1, int(max_queue))
+        self._breaker_cfg = (breaker_threshold, probe_interval_s,
+                             recover_after)
+        self.straggler_factor = straggler_factor
+        self._straggler_min_s = straggler_min_ms * 1e-3
         self._batcher = DynamicBatcher(max_wait_s=max_wait_ms * 1e-3,
                                        max_batch=self.buckets[-1])
         self._entries: dict[str, _Entry] = {}
@@ -186,13 +364,19 @@ class HeteroServer:
         self._inflight_lock = threading.Lock()
         self._stop = threading.Event()
         self._lock = threading.Lock()
+        # every admitted future, until resolved: the shutdown sweep's
+        # ground truth that nothing ever hangs
+        self._pending: set = set()
+        self._pending_lock = threading.Lock()
+        self._state = "new"                 # -> "running" -> "closed"
 
     # -- registration ------------------------------------------------------
 
     def register(self, name: str, mods, plans=None, params=None, *,
                  input_hw=(96, 96), buckets=None, warm: bool = True,
                  use_pallas: bool | None = None, calib_x=None,
-                 pipelined: bool = False) -> dict:
+                 pipelined: bool = False,
+                 prewarm_fallback: bool = False) -> dict:
         """Compile, prepare and bucket-warm a network under ``name``.
 
         ``input_hw`` is one (H, W) pair or a list of them: every listed
@@ -206,18 +390,27 @@ class HeteroServer:
         plans carry different plan signatures, so mixed registrations
         never share an engine.  ``pipelined=True`` serves through the
         stage-pipelined engine (bit-identical results; device hand-offs
-        exposed for overlap).  Returns the engine's exec stats after
-        warm-up (one trace per bucket x resolution)."""
+        exposed for overlap).  ``prewarm_fallback=True`` compiles and
+        bucket-warms the GPU-only failover plan NOW, bounding a later
+        failover pause to the atomic redirect instead of a first-failure
+        compile (by default the fallback builds lazily when the breaker
+        trips).  Returns the engine's exec stats after warm-up (one trace
+        per bucket x resolution)."""
         if params is None:
             params = init_network(mods, jax.random.PRNGKey(0))
         if use_pallas is None:
             use_pallas = self.use_pallas    # server-wide default
         entry = _Entry(name, mods, plans, params,
                        input_hw, buckets or self.buckets, use_pallas,
-                       calib_x=calib_x, pipelined=pipelined)
+                       calib_x=calib_x, pipelined=pipelined,
+                       breaker=_Breaker(*self._breaker_cfg),
+                       straggler_factor=self.straggler_factor)
+        if prewarm_fallback and plans is not None:
+            entry.ensure_fallback()
         with self._lock:
             self._entries[name] = entry
             self._caps[name] = entry.buckets
+        self.metrics.set_breaker(name, entry.breaker.label)
         return entry.warmup() if warm else entry.engine.exec_stats()
 
     def networks(self) -> list[str]:
@@ -237,7 +430,9 @@ class HeteroServer:
         ``refresh`` recompiles, so a recompile that raced the swap can
         never revert it.  ``calib_x`` defaults to the batch stored at
         register time (calibrated plans re-freeze their scales against
-        the new weights).  Returns the new generation stamp."""
+        the new weights).  A built GPU-only fallback variant re-prepares
+        under the same swap, so a later failover serves the new weights.
+        Returns the new generation stamp."""
         with self._lock:
             entry = self._entries.get(name)
         if entry is None:
@@ -246,12 +441,17 @@ class HeteroServer:
         with entry.swap_lock:
             cal = calib_x if calib_x is not None else entry.calib_x
             prepared = entry.engine.prepare(params, cal)  # shadow prepare
+            fb_prepared = (entry.fb_engine.prepare(params)
+                           if entry.fb_engine is not None else None)
             with self._lock:
                 entry.params = params
                 if calib_x is not None:
                     entry.calib_x = calib_x
                 old_gen = entry.prepared.generation
                 entry.prepared = prepared                 # atomic redirect
+                if fb_prepared is not None:
+                    entry.fb_prepared = fb_prepared
+                entry.bk_engine = None    # backup re-prepares on next use
         self.metrics.record_swap()
         return {"network": name, "generation": prepared.generation,
                 "previous_generation": old_gen}
@@ -259,8 +459,12 @@ class HeteroServer:
     # -- lifecycle ---------------------------------------------------------
 
     def start(self) -> "HeteroServer":
+        if self._state == "closed":
+            raise ServerClosed("start() after shutdown(): a HeteroServer "
+                               "is single-use")
         if self._thread is not None:
             return self
+        self._state = "running"
         self._stop.clear()
         if self._completions is not None:
             self._cthread = threading.Thread(target=self._completion_loop,
@@ -274,31 +478,55 @@ class HeteroServer:
         return self
 
     def shutdown(self, timeout: float = 10.0) -> None:
-        """Stop the drain loop after flushing everything still queued (and,
-        at in_flight > 1, after every dispatched batch completed)."""
-        if self._thread is None:
-            return
-        self._stop.set()
-        self._batcher.put(Request("__wake__", None))   # unblock wait_ready
-        self._thread.join(timeout)
-        if self._thread.is_alive():
-            # drain thread still mid-flush (e.g. a long recompile): leave
-            # the completion thread running so its batches still resolve;
-            # a later shutdown() retries the join
-            return
-        self._thread = None
-        for lane, reqs in self._batcher.drain_all():
-            reqs = [r for r in reqs if r.network != "__wake__"]
-            if not reqs:
+        """Graceful drain: stop admission first, flush everything still
+        queued (partial buckets included, in chunks when a backlog
+        exceeds the largest bucket), let every dispatched batch complete
+        (at in_flight > 1 via the completion thread), then resolve
+        anything still pending with ``Shutdown`` — a shutdown never
+        leaves a future hanging."""
+        self._state = "closed"                         # stop admission
+        if self._thread is not None:
+            self._stop.set()
+            self._batcher.put(Request("__wake__", None))  # unblock wait_ready
+            self._thread.join(timeout)
+            if self._thread.is_alive():
+                # drain thread still mid-flush (e.g. a long recompile):
+                # leave the completion thread running so its batches still
+                # resolve; a later shutdown() retries the join
+                return
+            self._thread = None
+            # bounded passes: a dispatch-failure retry during the drain
+            # re-enqueues head-of-lane and must still be flushed
+            for _ in range(3):
+                drained = self._batcher.drain_all()
+                if not drained:
+                    break
+                for lane, reqs in drained:
+                    reqs = [r for r in reqs if r.network != "__wake__"]
+                    if not reqs:
+                        continue
+                    # a backlog can exceed the largest bucket — chunk it
+                    cap = self._caps.get(lane.network, self.buckets)[-1]
+                    for i in range(0, len(reqs), cap):
+                        self.metrics.count("drain_flushed")
+                        self._flush(lane, reqs[i:i + cap], by_deadline=True)
+            if self._cthread is not None:
+                self._completions.put(None)            # completion sentinel
+                self._cthread.join(timeout)
+                self._cthread = None
+        # registry sweep: whatever survived the flush resolves typed
+        with self._pending_lock:
+            leftovers = list(self._pending)
+            self._pending.clear()
+        for fut in leftovers:
+            if fut.done():
                 continue
-            # a backlog can exceed the largest bucket — flush in chunks
-            cap = self._caps.get(lane.network, self.buckets)[-1]
-            for i in range(0, len(reqs), cap):
-                self._flush(lane, reqs[i:i + cap], by_deadline=True)
-        if self._cthread is not None:
-            self._completions.put(None)                # completion sentinel
-            self._cthread.join(timeout)
-            self._cthread = None
+            try:
+                fut.set_exception(Shutdown("server shut down before this "
+                                           "request could be served"))
+                self.metrics.count("drain_aborted")
+            except Exception:           # resolved in the race window: fine
+                pass
 
     def __enter__(self) -> "HeteroServer":
         return self.start()
@@ -308,11 +536,38 @@ class HeteroServer:
 
     # -- request path ------------------------------------------------------
 
-    def submit(self, name: str, x, *, priority: int = DEFAULT_PRIORITY):
+    def _fulfil(self, fut, value) -> None:
+        """Resolve a future with a result, exactly once (late duplicates —
+        e.g. a shutdown sweep racing a completion — are dropped)."""
+        with self._pending_lock:
+            self._pending.discard(fut)
+        try:
+            fut.set_result(value)
+        except Exception:
+            pass
+
+    def _reject(self, fut, exc) -> None:
+        with self._pending_lock:
+            self._pending.discard(fut)
+        try:
+            fut.set_exception(exc)
+        except Exception:
+            pass
+
+    def submit(self, name: str, x, *, priority: int = DEFAULT_PRIORITY,
+               deadline_ms: float | None = None):
         """Admit one image; returns a ``concurrent.futures.Future`` whose
         result is that request's logits row.  The image's (H, W) picks the
         resolution lane; ``priority <= 0`` routes to the deadline-critical
-        lane (shorter flush deadline), larger values are bulk traffic."""
+        lane (shorter flush deadline), larger values are bulk traffic.
+
+        ``deadline_ms`` is a per-request deadline from now: if the batch
+        holding the request has not dispatched by then, the future
+        resolves with ``DeadlineExceeded``.  Raises ``ServerClosed`` when
+        the server is not running, ``Overloaded`` when the request's lane
+        is at the ``max_queue`` depth bound (load shed)."""
+        # validation precedes the state check: a malformed request is
+        # malformed whether or not the server is running
         with self._lock:
             entry = self._entries.get(name)
         if entry is None:
@@ -329,9 +584,24 @@ class HeteroServer:
                              f"{' or '.join(map(str, want))} "
                              f"(or with a leading batch-1 axis), "
                              f"got {shape}")
-        req = Request(name, x, res=res, priority=int(priority))
-        self.metrics.record_submit(now=time.monotonic())
-        self._batcher.put(req)
+        if self._state != "running":
+            raise ServerClosed("submit() before start()"
+                               if self._state == "new" else
+                               "submit() after shutdown()")
+        now = time.monotonic()
+        deadline = None if deadline_ms is None else now + deadline_ms * 1e-3
+        req = Request(name, x, res=res, priority=int(priority),
+                      deadline_s=deadline)
+        with self._pending_lock:
+            self._pending.add(req.future)
+        if not self._batcher.put(req, bound=self.max_queue):
+            with self._pending_lock:
+                self._pending.discard(req.future)
+            self.metrics.count("shed")
+            raise Overloaded(f"lane {lane_label(req.lane)} at queue-depth "
+                             f"bound {self.max_queue}",
+                             lane=req.lane, bound=self.max_queue)
+        self.metrics.record_submit(now=now)
         return req.future
 
     def submit_many(self, name: str, images, *,
@@ -356,15 +626,22 @@ class HeteroServer:
 
     def _drain_loop(self) -> None:
         while not self._stop.is_set():
-            got = self._batcher.wait_ready(timeout=0.05,
-                                           buckets_by=self._caps,
-                                           can_dispatch=self._can_dispatch)
-            if got is None:
-                continue
-            lane, reqs, by_deadline = got
-            reqs = [r for r in reqs if r.network != "__wake__"]
-            if reqs:
-                self._flush(lane, reqs, by_deadline)
+            reqs: list = []
+            try:
+                got = self._batcher.wait_ready(
+                    timeout=0.05, buckets_by=self._caps,
+                    can_dispatch=self._can_dispatch)
+                if got is None:
+                    continue
+                lane, popped, by_deadline = got
+                reqs = [r for r in popped if r.network != "__wake__"]
+                if reqs:
+                    self._flush(lane, reqs, by_deadline)
+            except Exception as e:      # defensive: the loop must survive
+                self.metrics.count("errors")
+                self.metrics.record_failure(len(reqs))
+                for r in reqs:
+                    self._reject(r.future, e)
 
     def _flush(self, lane: LaneKey, reqs, by_deadline: bool) -> None:
         """Dispatch one single-lane batch.  At in_flight == 1 this also
@@ -376,19 +653,40 @@ class HeteroServer:
             entry = self._entries.get(lane.network)
         if entry is None:                     # unregistered mid-flight
             for r in reqs:
-                r.future.set_exception(KeyError(lane.network))
+                self._reject(r.future, KeyError(lane.network))
             self.metrics.record_failure(len(reqs))
             return
+        # per-request deadlines: late rows reject BEFORE dispatch — a
+        # deadline that passed while queued is never served late
+        now = time.monotonic()
+        live = []
+        for r in reqs:
+            if r.deadline_s is not None and now > r.deadline_s:
+                self.metrics.count("deadline_exceeded")
+                self.metrics.record_failure(1)
+                self._reject(r.future, DeadlineExceeded(
+                    f"queued {now - r.t_enqueue:.4f}s, deadline "
+                    f"{r.deadline_s - r.t_enqueue:.4f}s",
+                    waited_s=now - r.t_enqueue,
+                    deadline_s=r.deadline_s - r.t_enqueue))
+                continue
+            live.append(r)
+        if not live:
+            return
+        reqs = live
         try:
-            if not entry.engine.is_current():
+            engine, prepared = entry.active()
+            if not engine.is_current():
                 # executor cache was cleared under us: rebuild, stay live
                 entry.refresh()
                 self.metrics.record_recompile()
-            # one snapshot per batch: a concurrent swap_params lands either
-            # wholly before or wholly after this batch, never inside it
-            prepared = entry.prepared
+                engine, prepared = entry.active()
             bucket = pick_bucket(len(reqs), entry.buckets)
             xb = pad_batch([r.x for r in reqs], bucket)
+            if entry.mode == "fallback" and entry.breaker.probe_due(now):
+                self._probe(entry, xb)
+                # a completed recovery redirects THIS batch already
+                engine, prepared = entry.active()
             if self._completions is not None:
                 # depth gate BEFORE dispatch: this batch is padded and
                 # ready while at most (in_flight - 1) computations are
@@ -397,52 +695,158 @@ class HeteroServer:
                 while len(self._outstanding) >= self.in_flight - 1:
                     jax.block_until_ready(self._outstanding.pop(0))
             # xb is drain-loop-owned and never read after dispatch: donate
-            # its buffer (exec_stats counts the copies saved)
-            out = entry.engine(prepared, xb, donate=True)
-            self._inflight_add(1)
-            if self._completions is not None:
-                self._outstanding.append(out)
-                self._completions.put((lane, reqs, bucket, by_deadline, out))
-            else:
-                self._complete(lane, reqs, bucket, by_deadline, out)
-        except Exception as e:                # pragma: no cover - defensive
-            for r in reqs:
-                if not r.future.done():
-                    r.future.set_exception(e)
-            self.metrics.record_failure(len(reqs))
+            # its buffer (exec_stats counts the copies saved).  The host
+            # array itself survives donation, so the completion path can
+            # still re-dispatch it on the straggler backup engine.
+            out = engine(prepared, xb, donate=True)
+        except Exception as e:
+            self._dispatch_failure(entry, lane, reqs, e, by_deadline)
+            return
+        if entry.mode == "primary":
+            entry.breaker.record_success()
+        self._inflight_add(1)
+        item = (entry, lane, reqs, bucket, by_deadline, xb, out)
+        if self._completions is not None:
+            self._outstanding.append(out)
+            self._completions.put(item)
+        else:
+            try:
+                self._complete(*item)
+            finally:
+                self._inflight_add(-1)
+                self._batcher.kick()
 
-    def _complete(self, lane: LaneKey, reqs, bucket: int, by_deadline: bool,
-                  out) -> None:
-        """Resolve one dispatched batch: block until the device result
-        lands, de-batch, fulfil futures, release the admission slot."""
+    def _dispatch_failure(self, entry: _Entry, lane: LaneKey, reqs,
+                          exc: Exception, by_deadline: bool) -> None:
+        """A dispatch raised before any result existed.  Policy:
+        FPGA-attributed failures on the primary plan feed the circuit
+        breaker — tripping it fails over to the GPU-only plan and
+        re-dispatches the same rows WITHOUT spending their retry budget
+        (the rows did nothing wrong).  Every other failure de-batches
+        into one bounded retry per request, re-enqueued head-of-lane so
+        FIFO-within-lane survives; rows out of budget reject with the
+        original error."""
+        dev = faults.fault_device(exc)
+        if entry.mode == "primary" and dev == "fpga":
+            if entry.breaker.record_failure():
+                self.metrics.set_breaker(entry.name, entry.breaker.label)
+                try:
+                    entry.failover()
+                except Exception:
+                    pass     # fallback build failed: fall to the retry path
+                else:
+                    self.metrics.count("failovers")
+                    self._flush(lane, reqs, by_deadline)  # budget-free retry
+                    return
+        retry, dead = [], []
+        for r in reqs:
+            if r.retries < 1:
+                r.retries += 1
+                retry.append(r)
+            else:
+                dead.append(r)
+        if retry:
+            self.metrics.count("retries", len(retry))
+            self._batcher.put_front(retry)
+        for r in dead:
+            self._reject(r.future, exc)
+        if dead:
+            self.metrics.record_failure(len(dead))
+
+    def _probe(self, entry: _Entry, xb) -> None:
+        """Half-open probe batch on the primary engine (output discarded);
+        ``recover_after`` consecutive passes swap live traffic back."""
+        now = time.monotonic()
+        ok = entry.probe(xb)
+        self.metrics.count("probes_ok" if ok else "probes_failed")
+        if entry.breaker.record_probe(ok, now):
+            entry.recover()
+            self.metrics.count("recoveries")
+        self.metrics.set_breaker(entry.name, entry.breaker.label)
+
+    # -- completion path ---------------------------------------------------
+
+    def _watch(self, entry: _Entry, xb, out):
+        """Straggler watchdog: poll the async result against the rolling
+        budget (``straggler_factor`` x the entry's median completion,
+        floored at ``straggler_min_ms``).  Past the budget: count the
+        event and, for pipelined entries, race a backup monolithic
+        dispatch of the same batch — whichever result this returns, the
+        bits match (same plans, same prepared tree contract)."""
+        budget = entry.monitor.budget()
+        if budget is None or not hasattr(out, "is_ready"):
+            return out
+        budget = max(budget, self._straggler_min_s)
+        t0 = time.monotonic()
+        while not out.is_ready():
+            if time.monotonic() - t0 > budget:
+                self.metrics.count("straggler_events")
+                backup = self._backup_dispatch(entry, xb)
+                return out if backup is None else backup
+            time.sleep(0.0005)
+        return out
+
+    def _backup_dispatch(self, entry: _Entry, xb):
+        """Best-effort monolithic re-dispatch of a straggling pipelined
+        batch; None (= keep waiting on the original) when the entry is
+        monolithic already or the backup itself fails."""
         try:
+            engine = entry.ensure_backup()
+            if engine is None:
+                return None
+            self.metrics.count("backup_dispatches")
+            return engine(entry.bk_prepared, xb)
+        except Exception:
+            return None
+
+    def _complete(self, entry: _Entry, lane: LaneKey, reqs, bucket: int,
+                  by_deadline: bool, xb, out) -> None:
+        """Resolve one dispatched batch: block until the device result
+        lands (under the straggler watchdog), de-batch, fulfil futures.
+        Callers release the admission slot (their ``finally``), so a
+        crash in here can never double-release it."""
+        t0 = time.monotonic()
+        try:
+            out = self._watch(entry, xb, out)
             jax.block_until_ready(out)
+            entry.monitor.record(entry.next_seq(), time.monotonic() - t0)
             # one host copy, then de-batch as numpy views — per-row device
             # slices would pay 1 dispatch per request
             rows = np.asarray(out)
             now = time.monotonic()
             lats = [now - r.t_enqueue for r in reqs]
             for i, r in enumerate(reqs):
-                r.future.set_result(rows[i])
+                self._fulfil(r.future, rows[i])
             self.metrics.record_batch(len(reqs), bucket, lats, by_deadline,
                                       now=now, lane=lane_label(lane))
-        except Exception as e:                # pragma: no cover - defensive
+        except Exception as e:
+            # completion-time failure: the batch's rows get the error — no
+            # retry from here (a requeue behind younger completed traffic
+            # would break FIFO-within-lane at in_flight > 1)
             for r in reqs:
-                if not r.future.done():
-                    r.future.set_exception(e)
+                self._reject(r.future, e)
             self.metrics.record_failure(len(reqs))
-        finally:
-            self._inflight_add(-1)
-            self._batcher.kick()    # a slot freed: deferred flushes re-check
 
     def _completion_loop(self) -> None:
         """FIFO completion path (in_flight > 1): batches resolve in
-        dispatch order, so per-request ordering survives pipelining."""
+        dispatch order, so per-request ordering survives pipelining.
+        Wrapped so an unexpected error resolves the batch's futures and
+        the loop keeps serving — one bad batch never wedges the server."""
         while True:
             item = self._completions.get()
             if item is None:                  # shutdown sentinel
                 return
-            self._complete(*item)
+            reqs = item[2]
+            try:
+                self._complete(*item)
+            except Exception as e:            # pragma: no cover - defensive
+                self.metrics.count("errors")
+                self.metrics.record_failure(len(reqs))
+                for r in reqs:
+                    self._reject(r.future, e)
+            finally:
+                self._inflight_add(-1)
+                self._batcher.kick()  # a slot freed: deferred flushes re-run
 
     # -- observability -----------------------------------------------------
 
@@ -455,9 +859,13 @@ class HeteroServer:
                               "pipelined": e.pipelined,
                               "buckets": e.buckets,
                               "resolutions": e.resolutions,
-                              "param_generation": e.prepared.generation}
+                              "param_generation": e.prepared.generation,
+                              "mode": e.mode,
+                              "breaker": e.breaker.label,
+                              "fallback_ready": e.fb_engine is not None}
                        for name, e in self._entries.items()}
         return {"server": self.metrics.snapshot(),
+                "state": self._state,
                 "in_flight": self.in_flight,
                 "inflight_batches": self._inflight(),
                 "engines": engines,

@@ -1,0 +1,439 @@
+"""Fault-tolerant serving: deterministic injection (``repro.runtime.faults``)
+drives every failure path of ``HeteroServer`` in CI with no hardware —
+bounded retries, typed rejections, FPGA-failure circuit-breaker failover to
+the GPU-only plan with half-open probe recovery, straggler watchdog, and
+graceful drain.  The request-level contract under test: every admitted
+future resolves exactly once, and every served row bit-matches the batch-1
+oracle of the plan that served it.
+
+Oracle engines are always built and called OUTSIDE ``inject`` scopes: the
+injection point is process-global, exactly like the engine cache.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.executor import compile_network, compile_pipelined
+from repro.core.graph import fire
+from repro.core.hetero import init_network
+from repro.core.partitioner import partition_network
+from repro.runtime.faults import (FaultPlan, FaultRule, InjectedFault,
+                                  fault_device, inject, trip)
+from repro.serving import (DeadlineExceeded, HeteroServer, Overloaded,
+                           ServerClosed, Shutdown)
+
+HW = (8, 8)
+C = 16
+
+
+def _mods():
+    return [fire("f", C, 16, 4, 8)]
+
+
+def _images(n, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), n)
+    return [0.5 * jax.random.normal(k, (*HW, C)) for k in ks]
+
+
+# --- FaultPlan / FaultRule units -------------------------------------------
+
+def test_rule_window_after_and_times_is_deterministic():
+    plan = FaultPlan([FaultRule(op="dispatch", after=1, times=2)])
+    plan.check("dispatch")                       # hit 1: skipped (after=1)
+    for _ in range(2):                           # hits 2-3: fire
+        with pytest.raises(InjectedFault):
+            plan.check("dispatch")
+    plan.check("dispatch")                       # hit 4: times exhausted
+    r = plan.rules[0]
+    assert (r.hits, r.fired) == (4, 2)
+    assert [e.hit for e in plan.fired] == [2, 3]
+
+
+def test_rule_device_matching_against_site_sets():
+    plan = FaultPlan([FaultRule(op="dispatch", device="fpga", times=None)])
+    plan.check("dispatch", device=("gpu",))      # GPU-only site: no match
+    with pytest.raises(InjectedFault) as ei:
+        plan.check("dispatch", device=("fpga", "gpu"))   # hybrid site
+    assert ei.value.device == "fpga"
+    # site reports no device: the rule's device is attribution only
+    with pytest.raises(InjectedFault) as ei:
+        plan.check("dispatch")
+    assert fault_device(ei.value) == "fpga"
+
+
+def test_rule_stage_matching():
+    plan = FaultPlan([FaultRule(op="stage", stage=1, times=None)])
+    plan.check("stage", device="gpu", stage=0)
+    plan.check("dispatch", stage=1)              # wrong op
+    with pytest.raises(InjectedFault) as ei:
+        plan.check("stage", device="fpga", stage=1)
+    assert (ei.value.stage, ei.value.device) == (1, "fpga")
+
+
+def test_delay_rule_sleeps_instead_of_raising():
+    plan = FaultPlan([FaultRule(op="dispatch", kind="delay",
+                                delay_s=0.02, times=1)])
+    t0 = time.monotonic()
+    plan.check("dispatch")                       # sleeps
+    assert time.monotonic() - t0 >= 0.02
+    plan.check("dispatch")                       # exhausted: no sleep
+    assert [e.kind for e in plan.fired] == ["delay"]
+
+
+def test_seeded_bernoulli_is_reproducible():
+    def pattern(seed):
+        plan = FaultPlan([FaultRule(op="dispatch", p=0.3, times=None)],
+                         seed=seed)
+        out = []
+        for _ in range(64):
+            try:
+                plan.check("dispatch")
+                out.append(0)
+            except InjectedFault:
+                out.append(1)
+        return out
+
+    assert pattern(7) == pattern(7)
+    assert any(pattern(7))                       # it does fire...
+    assert not all(pattern(7))                   # ...and does not always
+
+
+def test_trip_is_noop_without_installed_plan():
+    trip("dispatch", device=("fpga",))           # must not raise
+    with inject(FaultPlan([FaultRule(op="refresh", times=1)])) as plan:
+        with pytest.raises(InjectedFault):
+            trip("refresh")
+    trip("refresh")                              # uninstalled on exit
+    assert plan.fired[0].op == "refresh"
+
+
+def test_fault_device_ignores_non_string_tags():
+    assert fault_device(RuntimeError("plain")) is None
+    e = RuntimeError("tagged")
+    e.device = ("fpga", "gpu")                   # tuple: not an attribution
+    assert fault_device(e) is None
+    e.device = "fpga"
+    assert fault_device(e) == "fpga"
+
+
+# --- request-level guarantees ----------------------------------------------
+
+@pytest.mark.faults
+def test_submit_raises_server_closed_before_start_and_after_shutdown():
+    server = HeteroServer(buckets=(1, 4))
+    server.register("f", _mods(), None, input_hw=HW)
+    x = _images(1)[0]
+    with pytest.raises(ServerClosed, match="before start"):
+        server.submit("f", x)
+    # validation still precedes the state check
+    with pytest.raises(KeyError, match="unregistered"):
+        server.submit("nope", x)
+    with pytest.raises(ValueError, match="expected an image"):
+        server.submit("f", jnp.zeros((4, 4, C)))
+    with server:
+        server.submit("f", x).result(timeout=60)
+    with pytest.raises(ServerClosed, match="after shutdown"):
+        server.submit("f", x)
+    with pytest.raises(ServerClosed, match="single-use"):
+        server.start()
+
+
+@pytest.mark.faults
+def test_one_transient_dispatch_failure_is_retried_to_success():
+    mods = _mods()
+    server = HeteroServer(buckets=(1, 4), max_wait_ms=1.0)
+    server.register("f", mods, None, input_hw=HW)
+    eng = compile_network(mods, None)
+    prep = eng.prepare(server._entries["f"].params)
+    imgs = _images(4, seed=1)
+    plan = FaultPlan([FaultRule(op="dispatch", times=1)])
+    with server:
+        with inject(plan):
+            futs = [server.submit("f", x) for x in imgs]
+            outs = [f.result(timeout=60) for f in futs]
+    assert plan.rules[0].fired == 1
+    for x, out in zip(imgs, outs):
+        assert bool(jnp.all(out == eng(prep, x[None])[0]))
+    snap = server.metrics.snapshot()
+    assert snap["retries"] >= 1
+    assert snap["failed"] == 0
+
+
+@pytest.mark.faults
+def test_retry_budget_exhaustion_rejects_with_the_injected_error():
+    server = HeteroServer(buckets=(1, 4), max_wait_ms=1.0)
+    server.register("f", _mods(), None, input_hw=HW)
+    imgs = _images(3, seed=2)
+    # always-failing dispatch with no device attribution: the breaker
+    # (FPGA-only) never trips, so rows burn their one retry and reject
+    plan = FaultPlan([FaultRule(op="dispatch", times=None)])
+    with server:
+        with inject(plan):
+            futs = [server.submit("f", x) for x in imgs]
+            for f in futs:
+                with pytest.raises(InjectedFault):
+                    f.result(timeout=60)
+    snap = server.metrics.snapshot()
+    assert snap["failed"] == len(imgs)
+    assert snap["retries"] >= 1
+    assert not server._pending                    # nothing left hanging
+
+
+@pytest.mark.faults
+def test_per_request_deadline_rejects_typed():
+    server = HeteroServer(buckets=(4,), max_wait_ms=10000.0)
+    server.register("f", _mods(), None, input_hw=HW)
+    imgs = _images(2, seed=3)
+    server.start()
+    server._stop.set()                   # idle the drain loop...
+    time.sleep(0.2)
+    futs = [server.submit("f", x, deadline_ms=10.0) for x in imgs]
+    ok = server.submit("f", imgs[0])     # no deadline: must be served
+    time.sleep(0.05)                     # ...so the deadlines pass queued
+    server.shutdown()
+    for f in futs:
+        with pytest.raises(DeadlineExceeded) as ei:
+            f.result(timeout=60)
+        assert ei.value.waited_s > ei.value.deadline_s
+    assert ok.result(timeout=60) is not None
+    assert server.metrics.snapshot()["deadline_exceeded"] == 2
+
+
+@pytest.mark.faults
+def test_queue_bound_sheds_with_overloaded():
+    server = HeteroServer(buckets=(1,), max_wait_ms=10000.0, max_queue=2)
+    server.register("f", _mods(), None, input_hw=HW)
+    imgs = _images(3, seed=4)
+    server.start()
+    server._stop.set()                   # idle the drain loop: queue grows
+    time.sleep(0.2)
+    futs = [server.submit("f", imgs[0]), server.submit("f", imgs[1])]
+    with pytest.raises(Overloaded) as ei:
+        server.submit("f", imgs[2])
+    assert ei.value.bound == 2
+    server.shutdown()                    # admitted rows still drain
+    for f in futs:
+        assert f.result(timeout=60) is not None
+    snap = server.metrics.snapshot()
+    assert snap["shed"] == 1
+    assert snap["submitted"] == 2        # shed requests never count
+
+
+@pytest.mark.faults
+def test_shutdown_under_permanent_failure_resolves_every_future():
+    """Graceful drain with a dead engine: rows retry once, then reject —
+    and the pending-future sweep guarantees nothing hangs."""
+    server = HeteroServer(buckets=(1, 4), max_wait_ms=10000.0)
+    server.register("f", _mods(), None, input_hw=HW)
+    imgs = _images(6, seed=5)
+    server.start()
+    server._stop.set()
+    time.sleep(0.2)
+    futs = [server.submit("f", x) for x in imgs]
+    with inject(FaultPlan([FaultRule(op="dispatch", times=None)])):
+        server.shutdown()
+    for f in futs:
+        assert f.done()
+        with pytest.raises((InjectedFault, Shutdown)):
+            f.result(timeout=0)
+    assert not server._pending
+
+
+# --- failover + recovery (the acceptance path) ------------------------------
+
+def _hybrid_setup(**server_kw):
+    mods = _mods()
+    plans = partition_network(mods, paper_faithful=True)
+    params = init_network(mods, jax.random.PRNGKey(0))
+    server = HeteroServer(buckets=(1, 4), max_wait_ms=1.0, **server_kw)
+    server.register("f", mods, plans, params, input_hw=HW)
+    hybrid = compile_network(mods, plans)
+    h_prep = hybrid.prepare(params)
+    gpu = compile_network(mods, None)
+    g_prep = gpu.prepare(params)
+    oracles = {"hybrid": lambda x: hybrid(h_prep, x[None])[0],
+               "gpu": lambda x: gpu(g_prep, x[None])[0]}
+    return server, oracles
+
+
+@pytest.mark.faults
+def test_fpga_failover_bitmatch_and_probe_recovery():
+    """The tentpole acceptance test: consecutive FPGA-attributed dispatch
+    failures trip the breaker, traffic redirects to the shadow-prepared
+    GPU-only plan with ZERO lost futures, half-open probes recover the
+    hybrid plan once the fault clears, and every served row bit-matches
+    the batch-1 oracle of the plan that served it."""
+    server, oracle = _hybrid_setup(breaker_threshold=2,
+                                   probe_interval_s=0.03, recover_after=1)
+    imgs = _images(10, seed=6)
+    served = []
+    # 3 firings: two dispatch failures (trip at threshold=2) + the first
+    # half-open probe; the second probe finds the window exhausted -> heal
+    plan = FaultPlan([FaultRule(op="dispatch", device="fpga", times=3)])
+    with server:
+        with inject(plan):
+            for x in imgs[:4]:
+                served.append((x, server.submit("f", x).result(timeout=60)))
+            # ride through probe attempts until the breaker closes
+            for x in imgs[4:]:
+                served.append((x, server.submit("f", x).result(timeout=60)))
+                if server.stats()["engines"]["f"]["mode"] == "primary":
+                    break
+                time.sleep(0.05)
+        st = server.stats()["engines"]["f"]
+        assert st["mode"] == "primary", "breaker never recovered"
+        assert st["breaker"] == "closed"
+        assert st["fallback_ready"]
+        # post-recovery traffic serves on the hybrid plan again
+        x = imgs[-1]
+        out = server.submit("f", x).result(timeout=60)
+        assert bool(jnp.all(out == oracle["hybrid"](x)))
+    # zero lost futures, and every row bit-matches the plan that served it
+    for x, out in served:
+        h, g = oracle["hybrid"](x), oracle["gpu"](x)
+        assert bool(jnp.all(out == h)) or bool(jnp.all(out == g))
+    snap = server.metrics.snapshot()
+    assert snap["failovers"] >= 1
+    assert snap["recoveries"] >= 1
+    assert snap["probes_ok"] >= 1
+    assert snap["failed"] == 0
+    assert snap["breakers"]["f"] == "closed"
+
+
+@pytest.mark.faults
+def test_pipelined_stage_fault_attributes_device_and_fails_over():
+    """A fault injected at one FPGA stage of the pipelined engine carries
+    its device tag out to the breaker; threshold=1 fails over on the first
+    failure, so no request is ever lost."""
+    mods = _mods()
+    plans = partition_network(mods, paper_faithful=True)
+    params = init_network(mods, jax.random.PRNGKey(0))
+    pipe = compile_pipelined(mods, plans)
+    fpga_stages = [s for s, st in enumerate(pipe.stages)
+                   if st.device == "fpga"]
+    assert fpga_stages, "fire module must map a stage to fpga"
+    server = HeteroServer(buckets=(1, 4), max_wait_ms=1.0,
+                          breaker_threshold=1, probe_interval_s=60.0)
+    server.register("f", mods, plans, params, input_hw=HW, pipelined=True)
+    gpu = compile_network(mods, None)
+    g_prep = gpu.prepare(params)
+    imgs = _images(4, seed=7)
+    plan = FaultPlan([FaultRule(op="stage", stage=fpga_stages[0],
+                                times=None)])
+    with server:
+        with inject(plan):
+            outs = [server.submit("f", x).result(timeout=60) for x in imgs]
+    assert plan.fired and plan.fired[0].device == "fpga"
+    for x, out in zip(imgs, outs):
+        assert bool(jnp.all(out == gpu(g_prep, x[None])[0]))
+    snap = server.metrics.snapshot()
+    assert snap["failovers"] == 1
+    assert snap["failed"] == 0
+    assert server.stats()["engines"]["f"]["mode"] == "fallback"
+
+
+# --- straggler watchdog + loop survival -------------------------------------
+
+class _NeverReady:
+    """Stands in for a device array that never lands."""
+
+    def is_ready(self):
+        return False
+
+
+@pytest.mark.faults
+def test_straggler_watchdog_counts_event_and_returns_original():
+    server = HeteroServer(buckets=(1, 4), straggler_min_ms=1.0)
+    server.register("f", _mods(), None, input_hw=HW)
+    entry = server._entries["f"]
+    for s in range(10):                   # establish a tiny rolling budget
+        entry.monitor.record(s, 0.001)
+    stuck = _NeverReady()
+    out = server._watch(entry, np.zeros((1, *HW, C), np.float32), stuck)
+    assert out is stuck                   # monolithic entry: no backup
+    assert server.metrics.snapshot()["straggler_events"] == 1
+
+
+@pytest.mark.faults
+def test_straggler_backup_dispatch_bitmatches_for_pipelined_entry():
+    mods = _mods()
+    plans = partition_network(mods, paper_faithful=True)
+    params = init_network(mods, jax.random.PRNGKey(0))
+    server = HeteroServer(buckets=(1, 4), straggler_min_ms=1.0)
+    server.register("f", mods, plans, params, input_hw=HW, pipelined=True)
+    entry = server._entries["f"]
+    for s in range(10):
+        entry.monitor.record(s, 0.001)
+    mono = compile_network(mods, plans)
+    m_prep = mono.prepare(params)
+    x = _images(1, seed=8)[0]
+    xb = np.zeros((1, *HW, C), np.float32)
+    xb[0] = np.asarray(x)
+    out = server._watch(entry, xb, _NeverReady())
+    assert not isinstance(out, _NeverReady)   # backup result won the race
+    assert bool(jnp.all(jnp.asarray(out)[0] == mono(m_prep, x[None])[0]))
+    snap = server.metrics.snapshot()
+    assert snap["straggler_events"] == 1
+    assert snap["backup_dispatches"] == 1
+
+
+@pytest.mark.faults
+def test_completion_loop_survives_unexpected_error():
+    """An error past the dispatch point (satellite 2): the batch's futures
+    resolve exceptionally, the errors counter ticks, and the loop keeps
+    serving later traffic."""
+    server = HeteroServer(buckets=(1, 4), max_wait_ms=1.0, in_flight=2)
+    server.register("f", _mods(), None, input_hw=HW)
+    imgs = _images(2, seed=9)
+    orig = server._complete
+    state = {"armed": True}
+
+    def boom(*a):
+        if state["armed"]:
+            state["armed"] = False
+            raise RuntimeError("synthetic completion crash")
+        return orig(*a)
+
+    server._complete = boom
+    with server:
+        f0 = server.submit("f", imgs[0])
+        with pytest.raises(RuntimeError, match="synthetic completion"):
+            f0.result(timeout=60)
+        f1 = server.submit("f", imgs[1])
+        assert f1.result(timeout=60) is not None
+    snap = server.metrics.snapshot()
+    assert snap["errors"] == 1
+    assert not server._pending
+
+
+@pytest.mark.faults
+def test_prepare_fault_surfaces_at_register():
+    plan = FaultPlan([FaultRule(op="prepare", times=1)])
+    server = HeteroServer(buckets=(1,))
+    with inject(plan):
+        with pytest.raises(InjectedFault):
+            server.register("g", [fire("g", C, 16, 4, 8)], None,
+                            input_hw=HW)
+
+
+@pytest.mark.faults
+def test_injected_delay_is_survivable_noise():
+    """Latency injection never breaks correctness — it only slows."""
+    mods = _mods()
+    server = HeteroServer(buckets=(1, 4), max_wait_ms=1.0)
+    server.register("f", mods, None, input_hw=HW)
+    eng = compile_network(mods, None)
+    prep = eng.prepare(server._entries["f"].params)
+    imgs = _images(3, seed=10)
+    plan = FaultPlan([FaultRule(op="dispatch", kind="delay",
+                                delay_s=0.02, times=None)])
+    with server:
+        with inject(plan):
+            futs = [server.submit("f", x) for x in imgs]
+            outs = [f.result(timeout=60) for f in futs]
+    for x, out in zip(imgs, outs):
+        assert bool(jnp.all(out == eng(prep, x[None])[0]))
+    assert server.metrics.snapshot()["failed"] == 0

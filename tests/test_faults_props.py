@@ -1,0 +1,149 @@
+"""Property-based fault-tolerance: random interleavings of submit bursts,
+injected dispatch faults, load shedding and early shutdown must preserve
+the request-level contract — every admitted future resolves exactly once,
+and no lane loses, duplicates, or reorders its surviving rows.
+
+Skips cleanly when hypothesis is absent (the ``property`` extra)."""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.executor import compile_network
+from repro.core.graph import fire
+from repro.runtime.faults import FaultPlan, FaultRule, inject
+from repro.serving import HeteroServer, Overloaded
+
+HW = (8, 8)
+C = 16
+
+
+def _images(n, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), n)
+    return [0.5 * jax.random.normal(k, (*HW, C)) for k in ks]
+
+
+@pytest.mark.faults
+@given(data=st.data())
+@settings(max_examples=10, deadline=None)
+def test_random_interleavings_preserve_request_contract(data):
+    n = data.draw(st.integers(4, 14), label="n_requests")
+    priorities = data.draw(st.lists(st.integers(0, 1), min_size=n,
+                                    max_size=n), label="priorities")
+    fail_after = data.draw(st.integers(0, 10), label="fail_after")
+    fail_times = data.draw(st.integers(0, 3), label="fail_times")
+    delay_times = data.draw(st.integers(0, 2), label="delay_times")
+    max_queue = data.draw(st.integers(2, 64), label="max_queue")
+    in_flight = data.draw(st.sampled_from([1, 2]), label="in_flight")
+    early_shutdown = data.draw(st.booleans(), label="early_shutdown")
+
+    mods = [fire("f", C, 16, 4, 8)]
+    server = HeteroServer(buckets=(1, 4), max_wait_ms=1.0,
+                          in_flight=in_flight, max_queue=max_queue)
+    server.register("f", mods, None, input_hw=HW)
+    eng = compile_network(mods, None)            # oracle OUTSIDE inject
+    prep = eng.prepare(server._entries["f"].params)
+    imgs = _images(n, seed=n)
+
+    rules = []
+    if fail_times:
+        rules.append(FaultRule(op="dispatch", after=fail_after,
+                               times=fail_times))
+    if delay_times:
+        rules.append(FaultRule(op="dispatch", kind="delay", delay_s=0.002,
+                               times=delay_times))
+
+    completion_order = []                        # (priority, idx) as resolved
+    order_lock = threading.Lock()
+
+    def _tracker(idx, prio):
+        def cb(fut):
+            with order_lock:
+                completion_order.append((prio, idx))
+        return cb
+
+    admitted = []                                # (idx, x, prio, future)
+    shed = 0
+    with server:
+        with inject(FaultPlan(rules)):
+            for i, (x, prio) in enumerate(zip(imgs, priorities)):
+                try:
+                    f = server.submit("f", x, priority=prio)
+                except Overloaded:
+                    shed += 1
+                    continue
+                f.add_done_callback(_tracker(i, prio))
+                admitted.append((i, x, prio, f))
+            if not early_shutdown:
+                for _, _, _, f in admitted:      # wait inside the scope
+                    f.exception(timeout=60)
+            server.shutdown()                    # graceful drain
+
+    # 1. every admitted future resolved (exactly-once is structural:
+    #    concurrent.futures forbids a second set_result/set_exception)
+    for _, _, _, f in admitted:
+        assert f.done(), "an admitted future never resolved"
+    assert not server._pending
+
+    # 2. surviving rows are each caller's own bits — nothing lost to
+    #    padding, retries, batch-mates, or the drain path
+    survivors = [(i, x, prio, f) for i, x, prio, f in admitted
+                 if f.exception(timeout=0) is None]
+    for i, x, prio, f in survivors:
+        ref = eng(prep, x[None])[0]
+        assert bool(jnp.all(f.result(timeout=0) == ref)), \
+            f"request {i}: served row differs from its batch-1 oracle"
+
+    # 3. FIFO within lane: surviving rows of one lane resolve in
+    #    submission order (head-of-lane retries keep their place)
+    surviving_ids = {i for i, _, _, _ in survivors}
+    for lane_prio in (0, 1):
+        resolved = [i for prio, i in completion_order
+                    if prio == lane_prio and i in surviving_ids]
+        assert resolved == sorted(resolved), \
+            f"lane p{lane_prio} reordered surviving rows: {resolved}"
+
+    # 4. the books balance
+    snap = server.metrics.snapshot()
+    assert snap["shed"] == shed
+    assert snap["submitted"] == len(admitted)
+    assert snap["completed"] == len(survivors)
+
+
+@pytest.mark.faults
+@given(seed=st.integers(0, 2**16), shutdown_delay=st.floats(0.0, 0.01))
+@settings(max_examples=8, deadline=None)
+def test_shutdown_races_live_submissions_without_hanging(seed, shutdown_delay):
+    """A shutdown racing a submitting thread: whatever was admitted
+    resolves — served or typed — and nothing hangs."""
+    mods = [fire("f", C, 16, 4, 8)]
+    server = HeteroServer(buckets=(1, 4), max_wait_ms=1.0)
+    server.register("f", mods, None, input_hw=HW)
+    imgs = _images(8, seed=seed % 97)
+    futs = []
+
+    def pump():
+        for x in imgs:
+            try:
+                futs.append(server.submit("f", x))
+            except Exception:                    # ServerClosed mid-race: fine
+                return
+
+    server.start()
+    t = threading.Thread(target=pump)
+    t.start()
+    time.sleep(shutdown_delay)
+    server.shutdown()
+    t.join(30)
+    assert not t.is_alive()
+    for f in futs:
+        f.exception(timeout=60)                  # resolves, result or typed
+        assert f.done()
+    assert not server._pending

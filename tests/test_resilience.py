@@ -1,0 +1,104 @@
+"""``repro.runtime.resilience`` coverage: StragglerMonitor window /
+threshold / budget semantics, and FaultTolerantLoop crash-resume on a
+cheap synthetic state (the LM-model variant lives in test_checkpoint.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.runtime.resilience import (FaultTolerantLoop, StragglerMonitor,
+                                      reshard)
+
+
+# --- StragglerMonitor -------------------------------------------------------
+
+def test_monitor_no_budget_before_min_samples():
+    mon = StragglerMonitor(threshold=2.0, min_samples=5)
+    for s in range(4):
+        assert mon.record(s, 0.1) is False
+        assert mon.median() is None
+        assert mon.budget() is None
+    mon.record(4, 0.1)
+    assert mon.median() == pytest.approx(0.1)
+    assert mon.budget() == pytest.approx(0.2)
+
+
+def test_monitor_threshold_is_strict_multiple_of_median():
+    mon = StragglerMonitor(threshold=2.0, min_samples=5)
+    for s in range(10):
+        mon.record(s, 0.1)
+    # exactly at threshold x median: not a straggler (strict >)
+    assert mon.record(10, 0.2) is False
+    assert mon.record(11, 0.21) is True
+    step, seconds, med = mon.flagged[-1]
+    assert step == 11 and seconds == pytest.approx(0.21)
+    assert med == pytest.approx(0.1)
+
+
+def test_monitor_window_bounds_history_and_adapts_median():
+    mon = StragglerMonitor(threshold=2.0, window=50)
+    for s in range(200):
+        mon.record(s, 0.01)
+    assert len(mon.times) <= 50
+    # drift the workload slower: the rolling median follows, so what was
+    # a straggler against the old regime becomes normal
+    for s in range(200, 260):
+        mon.record(s, 0.05)
+    assert mon.median() == pytest.approx(0.05)
+    assert mon.record(260, 0.09) is False
+
+
+def test_monitor_flagged_list_is_bounded():
+    mon = StragglerMonitor(threshold=1.0, window=10, min_samples=1)
+    # threshold 1.0: every strictly-increasing step flags
+    for s in range(100):
+        mon.record(s, 0.01 * (s + 1))
+    assert len(mon.flagged) <= 10
+
+
+# --- FaultTolerantLoop (cheap state; no LM model) ---------------------------
+
+def _counting_loop(tmp_path, name, **kw):
+    def step(state, batch):
+        w = state["w"] + batch
+        return {"w": w}, jnp.sum(w)
+
+    ckpt = CheckpointManager(tmp_path / name)
+    return FaultTolerantLoop(step, ckpt, **kw)
+
+
+def _batches(step):
+    return jnp.full((4,), float(step + 1))
+
+
+def test_loop_crash_resume_bitmatches_uninterrupted(tmp_path):
+    state0 = {"w": jnp.zeros((4,))}
+    loop_a = _counting_loop(tmp_path, "a", save_every=2)
+    final_a, _ = loop_a.run(state0, _batches, total=9)
+
+    loop_b = _counting_loop(tmp_path, "b", save_every=2)
+    with pytest.raises(RuntimeError, match="simulated preemption"):
+        loop_b.run(state0, _batches, total=9, crash_at=5)
+    # the crash landed after step 5's checkpoint logic: step 4 is the
+    # latest save (save_every=2), so the relaunch replays 5..8 exactly
+    assert loop_b.ckpt.latest_step() == 4
+    final_b, _ = loop_b.run(state0, _batches, total=9)
+    np.testing.assert_array_equal(np.asarray(final_a["w"]),
+                                  np.asarray(final_b["w"]))
+
+
+def test_loop_records_step_times(tmp_path):
+    loop = _counting_loop(tmp_path, "t", save_every=100)
+    loop.run({"w": jnp.zeros((4,))}, _batches, total=6)
+    assert len(loop.monitor.times) == 6
+    assert all(t >= 0.0 for t in loop.monitor.times)
+
+
+def test_reshard_is_identity_on_single_device():
+    state = {"w": jnp.arange(8.0)}
+    sharding = jax.tree.map(
+        lambda x: jax.sharding.SingleDeviceSharding(jax.devices()[0]), state)
+    out = reshard(state, sharding)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(state["w"]))
