@@ -36,6 +36,14 @@ Prints ``name,us_per_call,derived`` CSV rows:
          load shedding under injected dispatch latency
          (faults/shed: shed_rate + within_deadline floor — rejects are
          synchronous, admitted rows all resolve)
+  replan online re-partitioning (§Replanning): injected FPGA stage
+         delays make the live hybrid plan measurably slow; the replanner
+         fits the delay from timed batches, re-partitions, and
+         hot-migrates mid-stream to the all-GPU plan
+         (replan/<net>/migrate: converged/bitmatch/post_speedup floors —
+         migration must happen, every row must bit-match its own plan
+         generation's oracle, and post-migration latency must not exceed
+         pre-migration)
   kernels wall-clock of the kernel reference paths on this host
   roofline per-cell dry-run roofline terms                     (§Roofline)
 
@@ -649,6 +657,100 @@ def faults_rows(res=32, n_req=48):
     return rows
 
 
+def replan_rows(res=32, rounds_cap=15):
+    """Online re-partitioning under live traffic (§Replanning).
+
+      replan/<net>/migrate   the paper-faithful hybrid plan serves a
+                             request stream while every FPGA stage pays a
+                             deterministic injected 4 ms delay; the
+                             replanner fits the inflated coefficients from
+                             timed batches, re-partitions, and
+                             hot-migrates to the all-GPU plan mid-stream.
+                             Floors: converged (the migration happened and
+                             landed on the all-GPU plan), bitmatch (every
+                             row from a generation-stable round equals the
+                             batch-1 oracle of the plan generation that
+                             served it), post_speedup (best post-migration
+                             round >= best pre-migration round — shedding
+                             the injected delay must show up in latency).
+    """
+    from repro.core.executor import compile_network
+    from repro.core.graph import NETWORKS
+    from repro.core.hetero import init_network
+    from repro.core.partitioner import partition_network
+    from repro.core.replan import Replanner
+    from repro.runtime.faults import FaultPlan, FaultRule, inject
+    from repro.serving import HeteroServer
+    net = "mobilenetv2"
+    mods = NETWORKS[net]()
+    plans = partition_network(mods, paper_faithful=True)
+    params = init_network(mods, jax.random.PRNGKey(0))
+    imgs = [0.5 * jax.random.normal(k, (res, res, 3))
+            for k in jax.random.split(jax.random.PRNGKey(1), 8)]
+    rep = Replanner(objective="latency", threshold=0.15, patience=2,
+                    min_samples=2)
+    # buckets=(8,) so each 8-request round is exactly one batch: a round
+    # is either fully inside one plan generation or the migration round
+    server = HeteroServer(buckets=(8,), max_wait_ms=2.0, replanner=rep,
+                          measure_every=1)
+    server.register(net, mods, plans, params, input_hw=(res, res),
+                    pipelined=True)
+    rule = FaultRule(op="stage", kind="delay", device="fpga",
+                     delay_s=0.004, times=None)
+    trace = []          # (gen_before, gen_after, plans_after, dt, outs)
+    with inject(FaultPlan([rule])):
+        with server:
+            entry = server._entries[net]
+            for rnd in range(rounds_cap):
+                g0 = entry.plan_generation
+                t0 = time.perf_counter()
+                outs = [f.result(timeout=300)
+                        for f in [server.submit(net, x) for x in imgs]]
+                dt = time.perf_counter() - t0
+                trace.append((g0, entry.plan_generation,
+                              list(entry.plans), dt, outs))
+                devs = server.stats()["engines"][net]["devices"]
+                if devs == ("gpu",) and rnd >= 3:
+                    break
+            st = server.stats()
+    converged = (1.0 if st["engines"][net]["devices"] == ("gpu",)
+                 and st["server"]["replans"] >= 1 else 0.0)
+    # per-generation bit-match: oracle engines built and called OUTSIDE
+    # the inject scope.  Rounds that migrated mid-flight have no single
+    # generation and are excluded (their rows were served, just not
+    # attributable to one oracle).
+    checked, match = 0, True
+    for g0, g1, plans_after, _dt, outs in trace:
+        if g0 != g1:
+            continue
+        oracle = compile_network(mods, plans_after)
+        oprep = oracle.prepare(params)
+        for x, out in zip(imgs, outs):
+            ref = oracle(oprep, jnp.asarray(x)[None])[0]
+            match = match and bool((out == ref).all())
+            checked += 1
+    bitmatch = 1.0 if match and checked else 0.0
+    pre = [dt for g0, g1, _p, dt, _o in trace if g0 == g1 == 0]
+    post = [dt for g0, g1, _p, dt, _o in trace if g0 == g1 >= 1]
+    pre_req = min(pre) / len(imgs) if pre else float("nan")
+    post_req = min(post) / len(imgs) if post else float("nan")
+    mig_round = next((i for i, (g0, g1, *_r) in enumerate(trace)
+                      if g1 > g0), -1)
+    fit = st["server"]["fitted"].get(net, {})
+    return [(f"replan/{net}/migrate", post_req * 1e6,
+             f"converged={converged};bitmatch={bitmatch};"
+             f"post_speedup={pre_req / post_req:.2f};"
+             f"pre_req_us={pre_req * 1e6:.0f};"
+             f"post_req_us={post_req * 1e6:.0f};"
+             f"replans={st['server']['replans']};"
+             f"measured={st['server']['measured_batches']};"
+             f"migration_round={mig_round};rounds={len(trace)};"
+             f"checked={checked};"
+             f"fit_gpu={fit.get('gpu', 0.0):.2f};"
+             f"fit_fpga={fit.get('fpga', 0.0):.2f};"
+             f"fit_xfer={fit.get('xfer', 0.0):.2f}")]
+
+
 def kernel_bench():
     from repro.kernels.flash_attention.ref import attention
     from repro.kernels.fused_block.ref import fused_dw_pw
@@ -718,6 +820,7 @@ SECTIONS = {
     "qos": qos_rows,
     "pipeline": pipeline_rows,
     "faults": faults_rows,
+    "replan": replan_rows,
     "kernels": kernel_bench,
     "roofline": roofline_rows,
 }

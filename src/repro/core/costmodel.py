@@ -92,6 +92,41 @@ class Cost:
 ZERO = Cost(0.0, 0.0)
 
 
+@dataclass(frozen=True)
+class CostScales:
+    """Multiplicative latency corrections to the a-priori device models.
+
+    The analytical models below predict *model seconds*; a deployed host
+    never matches them exactly.  ``CostScales`` is the three-coefficient
+    bridge the online re-fitter (``repro.core.replan``) estimates from
+    measured per-stage wall times:
+
+        wall_time(stage) ~= gpu  * modelled GPU compute
+                          + fpga * modelled FPGA compute
+                          + xfer * modelled PCIe transfer
+
+    Identity scales (the default) reproduce the unscaled paper model.
+    Only latency is scaled — energy comes from the power model and is not
+    observable from host-side timing, so the energy accounting stays the
+    paper's own.
+    """
+    gpu: float = 1.0
+    fpga: float = 1.0
+    xfer: float = 1.0
+
+    def clamped(self, lo: float = 1e-3, hi: float = 1e6) -> "CostScales":
+        """Positive, bounded coefficients — a least-squares fit on a noisy
+        window must never drive a modelled latency negative or to zero."""
+        clip = lambda v: min(max(v, lo), hi)   # noqa: E731
+        return CostScales(clip(self.gpu), clip(self.fpga), clip(self.xfer))
+
+    def as_dict(self) -> dict:
+        return {"gpu": self.gpu, "fpga": self.fpga, "xfer": self.xfer}
+
+
+IDENTITY_SCALES = CostScales()
+
+
 # ---------------------------------------------------------------------------
 # Jetson TX2 GPU (Pascal, 256 CUDA cores)
 # ---------------------------------------------------------------------------

@@ -51,6 +51,7 @@ parity-tested against (``tests/test_executor.py``).
 from __future__ import annotations
 
 import threading
+import time
 import warnings
 from collections.abc import Mapping
 from contextlib import contextmanager, nullcontext
@@ -195,7 +196,8 @@ class CompiledNetwork:
         self._jitted_donate = jax.jit(lowered.run, donate_argnums=(1,))
         self._shapes_seen: set = set()
         self._exec = {"calls": 0, "traces": 0, "prepares": 0,
-                      "donated_calls": 0, "donated_bytes": 0}
+                      "donated_calls": 0, "donated_bytes": 0,
+                      "timed_calls": 0}
         # cached engines are shared across threads (serving drain loop +
         # direct callers); keep the accounting race-free
         self._stats_lock = threading.Lock()
@@ -241,6 +243,24 @@ class CompiledNetwork:
             if donate:
                 return self._jitted_donate(tree, x)
             return self._jitted(tree, x)
+
+    def timed_call(self, prepared, x, *, donate: bool = False):
+        """Synchronous, measured forward: ``(out, [wall_seconds])``.  The
+        monolithic engine has no internal stage boundaries, so the list
+        holds ONE element — total dispatch-to-ready wall time.  The shape
+        is pre-traced outside the timed region so a first-shape call never
+        reports compile time as execution time."""
+        key = (tuple(x.shape), str(getattr(x, "dtype", "f32")), donate)
+        if key not in self._shapes_seen:
+            jax.block_until_ready(
+                self(prepared, jnp.zeros(x.shape, x.dtype), donate=donate))
+        t0 = time.perf_counter()
+        out = self(prepared, x, donate=donate)
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        with self._stats_lock:
+            self._exec["timed_calls"] += 1
+        return out, [dt]
 
     def warmup(self, prepared, shapes, *, donate: bool = False) -> dict:
         """Trace/compile each input shape once on zeros (per-bucket compile
@@ -300,7 +320,8 @@ class PipelinedEngine:
         self._env_bytes: dict[tuple, int] = {}   # per input shape, at trace
         self._exec = {"calls": 0, "traces": 0, "prepares": 0,
                       "stages": len(self.stages),
-                      "donated_calls": 0, "donated_bytes": 0}
+                      "donated_calls": 0, "donated_bytes": 0,
+                      "timed_calls": 0}
         self._stats_lock = threading.Lock()
 
     def prepare(self, params, calib_x=None) -> PreparedParams:
@@ -375,6 +396,36 @@ class PipelinedEngine:
                     envs.append(env)
         self._count_call(x, self._env_nbytes(x, envs))
         return env["__out"]
+
+    def timed_call(self, prepared, x, *, donate: bool = False):
+        """Measured forward with PER-STAGE wall times: ``(out, times)``
+        where ``times[s]`` is the dispatch-to-ready wall of stage ``s`` —
+        the list aligns 1:1 with ``self.stages`` and therefore with
+        ``repro.core.schedule.network_stage_components`` of the same
+        (modules, plans) pair.  Blocking at every stage boundary
+        serializes the sweep (no cross-stage async overlap), so this is a
+        sampling path: the serving layer measures every Nth batch and
+        leaves the rest on the async ``__call__``.  Injected stage faults
+        (``repro.runtime.faults``, ``op="stage"``) run inside the timed
+        region — injected delays are *measured*, which is what lets CI
+        drive the replanner without hardware."""
+        if ((tuple(x.shape), str(getattr(x, "dtype", "f32")))
+                not in self._shapes_seen):
+            # trace every stage outside the timed region
+            jax.block_until_ready(self(prepared, x))
+        faults.trip("dispatch", device=self.devices)
+        slices = self._slices(prepared)
+        env: dict = {}
+        times: list[float] = []
+        for s in range(len(self.stages)):
+            t0 = time.perf_counter()
+            env = self._dispatch(slices, x, env, s)
+            jax.block_until_ready(env)
+            times.append(time.perf_counter() - t0)
+        self._count_call(x, 0)
+        with self._stats_lock:
+            self._exec["timed_calls"] += 1
+        return env["__out"], times
 
     def run_many(self, prepared, xs, *, depth: int = 2) -> list:
         """Micro-batch software pipeline with at most ``depth`` batches in

@@ -17,12 +17,12 @@ partitioner therefore works in two stages:
 from __future__ import annotations
 
 from repro.core import costmodel as cm
-from repro.core.costmodel import Cost, ZERO
+from repro.core.costmodel import Cost, CostScales, ZERO
 from repro.core.graph import ModuleGraph, Node
 from repro.core.schedule import (Plan, Resources, fpga_chain_cost,
                                  fpga_resources, gpu_cost, module_gpu_only,
-                                 parallel_cost, pipelined_cost,
-                                 plan_stage_costs, split_spec_in)
+                                 network_stage_components, parallel_cost,
+                                 pipelined_cost, split_spec_in)
 
 ACT_BYTES = 1          # int8 feature maps on the link (paper's 8-bit)
 # channel-parallel slices per mapped layer; high values = full spatial
@@ -38,8 +38,9 @@ def _plan(m: ModuleGraph, scheme: str, cost: Cost, gpu_only: Cost,
                 fpga_resources(fpga_nodes, g_par), note)
 
 
-def candidates(m: ModuleGraph) -> list[Plan]:
-    base = module_gpu_only(m)
+def candidates(m: ModuleGraph,
+               scales: CostScales | None = None) -> list[Plan]:
+    base = module_gpu_only(m, scales)
     out: list[Plan] = [Plan(m.name, m.kind, "gpu_only",
                             {n.name: "gpu" for n in m.nodes},
                             cost=base, gpu_only=base)]
@@ -52,24 +53,25 @@ def candidates(m: ModuleGraph) -> list[Plan]:
         # --- whole module fused on the FPGA (fused-layer, Fig. 2c) --------
         i_b, o_b = (conv_nodes[0].spec.in_bytes(ACT_BYTES),
                     conv_nodes[-1].spec.out_bytes(ACT_BYTES))
-        c = fpga_chain_cost(conv_nodes, i_b, o_b, g_par)
-        glue = gpu_cost([n for n in m.nodes if n not in conv_nodes])
+        c = fpga_chain_cost(conv_nodes, i_b, o_b, g_par, scales)
+        glue = gpu_cost([n for n in m.nodes if n not in conv_nodes], scales)
         out.append(_plan(m, "fpga_fused", c + glue, base, conv_nodes, g_par,
                          {n.name: ("fpga" if n in conv_nodes else "gpu")
                           for n in m.nodes},
                          fused=[n.name for n in conv_nodes]))
         if m.kind == "fire":
-            out += _fire_candidates(m, base, g_par)
+            out += _fire_candidates(m, base, g_par, scales)
         elif m.kind == "bottleneck":
-            out += _bottleneck_candidates(m, base, g_par)
+            out += _bottleneck_candidates(m, base, g_par, scales)
         elif m.kind.startswith("shuffle_unit"):
-            out += _shuffle_candidates(m, base, g_par)
+            out += _shuffle_candidates(m, base, g_par, scales)
     return out
 
 
 # --- SqueezeNet Fire: squeeze on GPU, expand3x3 ‖ expand1x1 ---------------
 
-def _fire_candidates(m: ModuleGraph, base: Cost, g_par: int) -> list[Plan]:
+def _fire_candidates(m: ModuleGraph, base: Cost, g_par: int,
+                     scales: CostScales | None = None) -> list[Plan]:
     sq, e1, e3 = m.node("squeeze"), m.node("exp1"), m.node("exp3")
     plans = []
     # 3x3 slices cost 9x the area of a 1x1 slice: DHM maps k>1 layers at
@@ -77,10 +79,10 @@ def _fire_candidates(m: ModuleGraph, base: Cost, g_par: int) -> list[Plan]:
     if g_par != 1:
         return plans
     # paper scheme: Conv3x3 on FPGA hidden under Conv1x1 (+squeeze) on GPU
-    pre = gpu_cost([sq])
+    pre = gpu_cost([sq], scales)
     par = parallel_cost([e1], [e3], e3.spec.in_bytes(ACT_BYTES),
-                        e3.spec.out_bytes(ACT_BYTES), g_par)
-    cost = pre + par + cm.GPU.op_cost(m.node("cat").spec)
+                        e3.spec.out_bytes(ACT_BYTES), g_par, scales)
+    cost = pre + par + gpu_cost([m.node("cat")], scales)
     plans.append(_plan(m, "parallel_branch", cost, base, [e3], g_par,
                        {"squeeze": "gpu", "exp1": "gpu", "exp3": "fpga",
                         "cat": "gpu"},
@@ -88,12 +90,13 @@ def _fire_candidates(m: ModuleGraph, base: Cost, g_par: int) -> list[Plan]:
     # GConv split of exp3 input channels across devices (Fig. 2b)
     for frac in (0.25, 0.5):
         f_spec, g_spec = split_spec_in(e3.spec, frac)
-        pre = gpu_cost([sq])
+        pre = gpu_cost([sq], scales)
         par = parallel_cost(
             [e1, Node("exp3_gpu", g_spec, e3.inputs)],
             [Node("exp3_fpga", f_spec, e3.inputs)],
-            f_spec.in_bytes(ACT_BYTES), f_spec.out_bytes(ACT_BYTES), g_par)
-        cost = pre + par + cm.GPU.op_cost(m.node("cat").spec)
+            f_spec.in_bytes(ACT_BYTES), f_spec.out_bytes(ACT_BYTES), g_par,
+            scales)
+        cost = pre + par + gpu_cost([m.node("cat")], scales)
         plans.append(_plan(m, "gconv_split", cost, base,
                            [Node("exp3_fpga", f_spec, e3.inputs)], g_par,
                            {"squeeze": "gpu", "exp1": "gpu", "cat": "gpu"},
@@ -104,8 +107,8 @@ def _fire_candidates(m: ModuleGraph, base: Cost, g_par: int) -> list[Plan]:
 
 # --- MobileNetV2 bottleneck: 1x1 convs on FPGA (paper DWConv partition) ---
 
-def _bottleneck_candidates(m: ModuleGraph, base: Cost,
-                           g_par: int) -> list[Plan]:
+def _bottleneck_candidates(m: ModuleGraph, base: Cost, g_par: int,
+                           scales: CostScales | None = None) -> list[Plan]:
     plans = []
     names = [n.name for n in m.nodes]
     has_exp = "pw_exp" in names
@@ -117,19 +120,19 @@ def _bottleneck_candidates(m: ModuleGraph, base: Cost,
         e = m.node("pw_exp")
         cost = cost + fpga_chain_cost(
             [e], e.spec.in_bytes(ACT_BYTES), e.spec.out_bytes(ACT_BYTES),
-            g_par)
-    cost = cost + cm.GPU.op_cost(dw.spec)
+            g_par, scales)
+    cost = cost + gpu_cost([dw], scales)
     cost = cost + fpga_chain_cost(
         [proj], proj.spec.in_bytes(ACT_BYTES), proj.spec.out_bytes(ACT_BYTES),
-        g_par)
+        g_par, scales)
     assign = {n.name: ("gpu" if n.name == "dw" else "fpga") for n in m.nodes}
     plans.append(_plan(m, "dwconv_split", cost, base, pw_nodes, g_par, assign,
                        note="1x1 on FPGA, kxk dw on GPU (paper Fig.2a)"))
     # fused tail: dw + proj together on FPGA (fused-layer, Fig.2c)
-    cost = (gpu_cost([m.node("pw_exp")]) if has_exp else ZERO)
+    cost = (gpu_cost([m.node("pw_exp")], scales) if has_exp else ZERO)
     cost = cost + fpga_chain_cost(
         [dw, proj], dw.spec.in_bytes(ACT_BYTES),
-        proj.spec.out_bytes(ACT_BYTES), g_par)
+        proj.spec.out_bytes(ACT_BYTES), g_par, scales)
     assign = {n.name: ("fpga" if n.name in ("dw", "pw_proj") else "gpu")
               for n in m.nodes}
     plans.append(_plan(m, "fused_layer", cost, base, [dw, proj], g_par,
@@ -140,7 +143,8 @@ def _bottleneck_candidates(m: ModuleGraph, base: Cost,
 
 # --- ShuffleNetV2 units ----------------------------------------------------
 
-def _shuffle_candidates(m: ModuleGraph, base: Cost, g_par: int) -> list[Plan]:
+def _shuffle_candidates(m: ModuleGraph, base: Cost, g_par: int,
+                        scales: CostScales | None = None) -> list[Plan]:
     plans = []
     tail = [m.node("cat"), m.node("shuffle")]
     if m.kind == "shuffle_unit_down":
@@ -148,7 +152,8 @@ def _shuffle_candidates(m: ModuleGraph, base: Cost, g_par: int) -> list[Plan]:
         b2 = [m.node("b2_pw1"), m.node("b2_dw"), m.node("b2_pw2")]
         i_b = b1[0].spec.in_bytes(ACT_BYTES)
         o_b = b1[-1].spec.out_bytes(ACT_BYTES)
-        cost = parallel_cost(b2, b1, i_b, o_b, g_par) + gpu_cost(tail)
+        cost = (parallel_cost(b2, b1, i_b, o_b, g_par, scales)
+                + gpu_cost(tail, scales))
         assign = {n.name: "fpga" for n in m.nodes}
         assign.update({n.name: "gpu" for n in b2 + tail})
         plans.append(_plan(m, "parallel_branch", cost, base, b1, g_par,
@@ -159,8 +164,9 @@ def _shuffle_candidates(m: ModuleGraph, base: Cost, g_par: int) -> list[Plan]:
     # identity half stays on GPU; working half fused on FPGA
     i_b = b2[0].spec.in_bytes(ACT_BYTES)
     o_b = b2[-1].spec.out_bytes(ACT_BYTES)
-    cost = (gpu_cost([m.node("split")])
-            + fpga_chain_cost(b2, i_b, o_b, g_par) + gpu_cost(tail))
+    cost = (gpu_cost([m.node("split")], scales)
+            + fpga_chain_cost(b2, i_b, o_b, g_par, scales)
+            + gpu_cost(tail, scales))
     assign = {n.name: "gpu" for n in m.nodes}
     assign.update({n.name: "fpga" for n in b2})
     plans.append(_plan(m, "fused_layer", cost, base, b2, g_par, assign,
@@ -168,11 +174,12 @@ def _shuffle_candidates(m: ModuleGraph, base: Cost, g_par: int) -> list[Plan]:
                        note="working half fused on FPGA (seq)"))
     # pw convs to FPGA, dw stays GPU (MBv2-style)
     pw = [m.node("b2_pw1"), m.node("b2_pw2")]
-    cost = gpu_cost([m.node("split"), m.node("b2_dw")]) + gpu_cost(tail)
+    cost = (gpu_cost([m.node("split"), m.node("b2_dw")], scales)
+            + gpu_cost(tail, scales))
     for n in pw:
         cost = cost + fpga_chain_cost(
             [n], n.spec.in_bytes(ACT_BYTES), n.spec.out_bytes(ACT_BYTES),
-            g_par)
+            g_par, scales)
     assign = {x.name: "gpu" for x in m.nodes}
     assign.update({n.name: "fpga" for n in pw})
     plans.append(_plan(m, "dwconv_split", cost, base, pw, g_par, assign,
@@ -211,14 +218,19 @@ def partition_network(modules: list[ModuleGraph], objective: str = "paper",
                       latency_slack: float = 1.05,
                       mac_budget: int | None = None,
                       byte_budget: int | None = None,
-                      paper_faithful: bool = False) -> list[Plan]:
+                      paper_faithful: bool = False,
+                      scales: CostScales | None = None) -> list[Plan]:
+    """``scales`` re-prices every candidate under fitted latency
+    coefficients (``repro.core.replan``) — identity/None reproduces the
+    a-priori paper model.  The returned plans' ``cost``/``gpu_only``
+    fields carry the scaled accounting."""
     if objective not in VALID_OBJECTIVES:
         raise ValueError(f"unknown objective {objective!r}; "
                          f"expected one of {VALID_OBJECTIVES}")
     mac_budget = cm.FPGA.mac_budget if mac_budget is None else mac_budget
     byte_budget = cm.FPGA.onchip_bytes if byte_budget is None else byte_budget
 
-    all_cands = {m.name: candidates(m) for m in modules}
+    all_cands = {m.name: candidates(m, scales) for m in modules}
     if paper_faithful:
         for m in modules:
             keep = PAPER_SCHEMES.get(m.kind, ())
@@ -295,7 +307,8 @@ def fused_chain_coverage(modules: list[ModuleGraph],
 
 
 def pipelined_summary(modules: list[ModuleGraph], plans: list[Plan],
-                      n_inflight: int = 8) -> dict:
+                      n_inflight: int = 8,
+                      scales: CostScales | None = None) -> dict:
     """Price the stage-pipelined schedule of a partitioned network: the
     same per-node costs as ``summarize``, but stages (maximal same-device
     runs, merged across module boundaries — the exact cut
@@ -304,20 +317,8 @@ def pipelined_summary(modules: list[ModuleGraph], plans: list[Plan],
     This is how the partitioner prices the paper's overlap argument: a
     balanced FPGA/GPU split can beat a faster-but-lopsided one once k
     inputs are in flight."""
-    plan_by = {p.module: p for p in plans}
-    merged: list[tuple[str, Cost]] = []     # device-tagged network stages
-    segments = [seg for m in modules
-                for seg in plan_stage_costs(m, plan_by.get(m.name),
-                                            ACT_BYTES)]
-    # the network-level output reshape is a (free) GPU step; include it so
-    # the cut matches the executable stage list exactly
-    segments.append(("gpu", ZERO))
-    for dev, c in segments:
-        if merged and merged[-1][0] == dev:
-            merged[-1] = (dev, merged[-1][1] + c)
-        else:
-            merged.append((dev, c))
-    stages = [c for _d, c in merged]
+    stages = [sc.cost(scales)
+              for sc in network_stage_components(modules, plans, ACT_BYTES)]
     serial = pipelined_cost(stages, 1)             # fill == serial walk
     piped = pipelined_cost(stages, n_inflight)
     serial_n = Cost(serial.latency * n_inflight, serial.energy * n_inflight)

@@ -1,0 +1,377 @@
+"""Online re-partitioning: measurement -> fit -> repartition -> migrate.
+
+The partitioner picks the FPGA/GPU cut from an a-priori cost model
+(``repro.core.costmodel``), but a deployed host never matches that model
+exactly — and the paper's central claim is that the cut point is what
+latency and energy hinge on.  This module closes the loop:
+
+  1. **Observe.**  ``Replanner.observe`` ingests measured per-stage wall
+     times (``PipelinedEngine.timed_call``; monolithic engines report one
+     total) together with the model's stage decomposition
+     (``schedule.network_stage_components``), normalized per input row.
+     Observations accumulate in a sliding window per (network, resolution),
+     each tagged with the plan that produced it.
+  2. **Fit.**  ``fit_scales`` regresses measured stage time against the
+     three UNSCALED model features of each stage — GPU compute, FPGA
+     compute, PCIe transfer — by ridge-regularized least squares:
+
+         wall ~= gpu * t_gpu_model + fpga * t_fpga_model + xfer * t_pcie
+
+     The ridge prior pins any coefficient the window carries no signal for
+     (e.g. the FPGA column while serving an all-GPU plan) at its previous
+     fitted value instead of letting it drift, so migrating away from a
+     device does not erase what was learned about it.
+  3. **Decide.**  ``Replanner.consider`` re-runs the existing partitioner
+     under the fitted ``CostScales`` and compares the candidate plan's
+     *modelled* serial latency against the live plan's *measured* one.
+     Hysteresis: the modelled win must clear ``threshold`` (default 15%)
+     for ``patience`` consecutive windows before a migration is ordered —
+     a noisy window can never flap the plan.
+  4. **Migrate.**  The decision carries the candidate plans; the serving
+     layer (``HeteroServer``) executes it with the shadow-prepare /
+     atomic-redirect machinery generalized from the PR-6 breaker failover
+     — live traffic never drains, and every served row keeps bit-matching
+     the batch-1 oracle of the plan generation that served it.
+
+Everything here is plain host-side arithmetic — deterministic, no JAX,
+thread-safe — so the convergence contract is testable in tier-1 CI with
+synthetic measurements and in serving CI with injected stage delays.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from dataclasses import dataclass, field, replace
+
+import numpy as np
+
+from repro.core.costmodel import CostScales
+from repro.core.graph import ModuleGraph
+from repro.core.schedule import Plan, StageCost, network_stage_components
+
+
+# ---------------------------------------------------------------------------
+# Observations
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class StageSample:
+    """One measured stage execution attributed to model features: the
+    modelled (unscaled) seconds of GPU compute / FPGA compute / PCIe
+    transfer inside the stage, and the measured wall seconds per input
+    row.  The regression design matrix is rows of the first three."""
+    gpu_s: float
+    fpga_s: float
+    xfer_s: float
+    measured_s: float
+
+
+def stage_samples(components: list[StageCost], times: list[float],
+                  batch: int = 1) -> list[StageSample]:
+    """Attribute measured wall times to the model's stage decomposition.
+
+    ``len(times) == len(components)`` is the pipelined case — one sample
+    per stage, maximal attribution signal.  A monolithic engine reports a
+    single total; the components then collapse into ONE summed sample (the
+    regression still sees the device mix, just without per-stage
+    resolution).  Times are normalized per input row."""
+    b = max(1, int(batch))
+
+    def feat(sc: StageCost) -> tuple[float, float, float]:
+        return (sc.comp.latency if sc.device == "gpu" else 0.0,
+                sc.comp.latency if sc.device == "fpga" else 0.0,
+                sc.xfer.latency)
+
+    if len(times) == len(components):
+        return [StageSample(*feat(sc), t / b)
+                for sc, t in zip(components, times)]
+    gpu = sum(feat(sc)[0] for sc in components)
+    fpga = sum(feat(sc)[1] for sc in components)
+    xfer = sum(feat(sc)[2] for sc in components)
+    return [StageSample(gpu, fpga, xfer, sum(times) / b)]
+
+
+def fit_scales(samples: list[StageSample],
+               prior: CostScales | None = None,
+               ridge: float = 0.1) -> CostScales:
+    """Ridge-regularized least squares for the three latency coefficients.
+
+    Within one plan the transfer feature is collinear with FPGA compute
+    (every FPGA stage pays PCIe in+out), and a window observed under an
+    all-GPU plan has *zero* FPGA/transfer signal.  The ridge term pulls
+    each coefficient toward ``prior`` with a weight proportional to its
+    feature's magnitude in the window (plus a tiny absolute floor), so
+    well-observed coefficients follow the data and unobserved ones stay
+    exactly at the prior.  Results are clamped positive."""
+    prior = prior or CostScales()
+    if not samples:
+        return prior
+    A = np.array([[s.gpu_s, s.fpga_s, s.xfer_s] for s in samples])
+    t = np.array([s.measured_s for s in samples])
+    p = np.array([prior.gpu, prior.fpga, prior.xfer])
+    col = np.sqrt((A * A).mean(axis=0))
+    lam = ridge * col + 1e-9 * max(col.max(), 1e-6)
+    A_aug = np.vstack([A, np.diag(lam)])
+    t_aug = np.concatenate([t, lam * p])
+    sol, *_ = np.linalg.lstsq(A_aug, t_aug, rcond=None)
+    return CostScales(float(sol[0]), float(sol[1]),
+                      float(sol[2])).clamped()
+
+
+# ---------------------------------------------------------------------------
+# Plan identity and distance
+# ---------------------------------------------------------------------------
+
+def assign_signature(plans: list[Plan] | None) -> tuple:
+    """Hashable identity of a plan set's ROUTING decisions only — the part
+    a migration actually changes.  Cost fields are excluded on purpose:
+    the same cut re-priced under fitted scales is still the same plan."""
+    if plans is None:
+        return ("gpu_only",)
+    return tuple((p.module, tuple(sorted(p.assign.items())),
+                  tuple(sorted(p.gconv.items())), p.g_par)
+                 for p in plans)
+
+
+def _device_walk(modules: list[ModuleGraph],
+                 plans: list[Plan] | None) -> list[str]:
+    """Flat per-node device tape of a network under a plan set — the
+    sequence whose device flips are exactly the pipeline's cut points."""
+    plan_by = {p.module: p for p in plans} if plans else {}
+    tape: list[str] = []
+    for m in modules:
+        p = plan_by.get(m.name)
+        for n in m.nodes:
+            if p is not None and (p.assign.get(n.name) == "fpga"
+                                  or n.name in p.gconv):
+                tape.append("fpga")
+            else:
+                tape.append("gpu")
+        if m.residual:
+            tape.append("gpu")
+    tape.append("gpu")                     # network output reshape
+    return tape
+
+
+def cut_positions(modules: list[ModuleGraph],
+                  plans: list[Plan] | None) -> frozenset:
+    """Indices where the device tape flips — the FPGA<->GPU boundary
+    edges ``passes/stage.py`` cuts at."""
+    tape = _device_walk(modules, plans)
+    return frozenset(i for i in range(len(tape) - 1)
+                     if tape[i] != tape[i + 1])
+
+
+def boundary_distance(modules: list[ModuleGraph],
+                      plans_a: list[Plan] | None,
+                      plans_b: list[Plan] | None) -> int:
+    """How many boundary edges two plan sets disagree on (symmetric
+    difference of their cut positions).  0 = the same pipeline cut;
+    "within one boundary edge of the oracle plan" is the convergence
+    contract the replanner is tested against."""
+    return len(cut_positions(modules, plans_a)
+               ^ cut_positions(modules, plans_b))
+
+
+# ---------------------------------------------------------------------------
+# The replanner
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ReplanDecision:
+    """One ``consider`` outcome.  ``migrate=True`` carries the candidate
+    plans; otherwise ``reason`` says why the loop is holding still."""
+    network: str
+    migrate: bool
+    reason: str
+    scales: CostScales | None = None     # fitted coefficients (post-warmup)
+    plans: list | None = None            # candidate plan set (when it differs)
+    modelled_s: float = 0.0              # candidate serial latency under fit
+    measured_s: float = 0.0              # live plan measured serial latency
+    win: float = 0.0                     # 1 - modelled/measured
+    streak: int = 0                      # consecutive over-threshold windows
+
+
+@dataclass
+class _NetState:
+    """Per-network fitter state: observation sweeps (sliding window,
+    tagged with the plan that produced them), the accumulated coefficient
+    belief, and the hysteresis streak."""
+    sweeps: deque = field(default_factory=lambda: deque(maxlen=64))
+    prior: CostScales = field(default_factory=CostScales)
+    streak: int = 0
+    migrations: int = 0
+
+
+class Replanner:
+    """Online cost observer + hysteresis-gated repartition policy.
+
+    One instance serves a whole ``HeteroServer``: observations are keyed
+    by (network, resolution) but pooled per network for fitting (the
+    coefficients describe the HOST, not a resolution).  ``consider`` is
+    called from the server's drain thread; ``observe``/``snapshot`` may
+    be called from anywhere — all state is lock-guarded.
+
+    Knobs:
+      * ``threshold`` — minimum modelled win (fraction of measured
+        latency) before a window counts toward migration.  Below it the
+        streak resets: the loop cannot flap on noise.
+      * ``patience`` — consecutive qualifying windows required.
+      * ``window`` — observation sweeps retained per (network, res).
+      * ``min_samples`` — sweeps of the CURRENT plan required before any
+        decision (a fresh migration therefore starts a natural cooldown).
+      * ``ridge`` — regularization strength of the fit; the prior it
+        pulls toward is the previous fit, so coefficients for devices the
+        current plan never touches keep their learned values.
+    """
+
+    def __init__(self, objective: str = "latency",
+                 threshold: float = 0.15, patience: int = 3,
+                 window: int = 64, min_samples: int = 8,
+                 ridge: float = 0.1, act_bytes: int = 1,
+                 paper_faithful: bool = False):
+        self.objective = objective
+        self.threshold = float(threshold)
+        self.patience = max(1, int(patience))
+        self.window = max(2, int(window))
+        self.min_samples = max(1, int(min_samples))
+        self.ridge = float(ridge)
+        self.act_bytes = int(act_bytes)
+        self.paper_faithful = paper_faithful
+        self._lock = threading.Lock()
+        self._nets: dict[str, _NetState] = {}
+        self.events: list[dict] = []       # migration log, oldest first
+
+    def _state(self, network: str) -> _NetState:
+        st = self._nets.get(network)
+        if st is None:
+            st = self._nets[network] = _NetState(
+                sweeps=deque(maxlen=self.window))
+        return st
+
+    # -- observation ingest ------------------------------------------------
+
+    def observe(self, network: str, res, plans: list[Plan] | None,
+                components: list[StageCost], times: list[float],
+                batch: int = 1) -> None:
+        """Record one measured sweep: per-stage wall times (or one total)
+        for a batch served under ``plans``.  ``components`` must be the
+        ``network_stage_components`` of the same (modules, plans) pair
+        the engine executed."""
+        samples = stage_samples(components, times, batch)
+        key = tuple(res) if res is not None else None
+        tag = assign_signature(plans)
+        with self._lock:
+            self._state(network).sweeps.append((tag, key, samples))
+
+    def fitted(self, network: str) -> CostScales:
+        """Current fitted coefficients for a network (the stored prior
+        when nothing has been observed yet)."""
+        with self._lock:
+            st = self._state(network)
+            sweeps = list(st.sweeps)
+            prior = st.prior
+        flat = [s for _tag, _res, samples in sweeps for s in samples]
+        return fit_scales(flat, prior=prior, ridge=self.ridge)
+
+    # -- decision ----------------------------------------------------------
+
+    def consider(self, network: str, modules: list[ModuleGraph],
+                 plans: list[Plan] | None) -> ReplanDecision:
+        """Fit the window, repartition under the fit, compare against the
+        live plan's measured latency, and apply hysteresis.  Returns a
+        ``ReplanDecision``; the CALLER executes any migration (and keeps
+        calling ``observe`` afterward — the window deliberately retains
+        pre-migration sweeps, which is what pins the coefficients of the
+        device just migrated away from)."""
+        cur_tag = assign_signature(plans)
+        with self._lock:
+            st = self._state(network)
+            sweeps = list(st.sweeps)
+            prior = st.prior
+        cur = [samples for tag, _res, samples in sweeps if tag == cur_tag]
+        if len(cur) < self.min_samples:
+            return ReplanDecision(network, False,
+                                  f"warming: {len(cur)}/{self.min_samples} "
+                                  f"windows on the current plan")
+        flat = [s for _tag, _res, samples in sweeps for s in samples]
+        scales = fit_scales(flat, prior=prior, ridge=self.ridge)
+        with self._lock:
+            st.prior = scales          # accumulated belief survives windows
+        cand = partition_with(modules, self.objective, scales,
+                              paper_faithful=self.paper_faithful)
+        if assign_signature(cand) == cur_tag:
+            with self._lock:
+                st.streak = 0
+            return ReplanDecision(network, False,
+                                  "current plan optimal under fitted model",
+                                  scales=scales)
+        comps = network_stage_components(modules, cand, self.act_bytes)
+        modelled = sum(sc.latency(scales) for sc in comps)
+        measured = float(np.mean([sum(s.measured_s for s in samples)
+                                  for samples in cur]))
+        win = 1.0 - modelled / max(measured, 1e-12)
+        if win < self.threshold:
+            with self._lock:
+                st.streak = 0
+            return ReplanDecision(
+                network, False,
+                f"candidate win {win:.1%} below threshold "
+                f"{self.threshold:.0%}", scales=scales, plans=cand,
+                modelled_s=modelled, measured_s=measured, win=win)
+        with self._lock:
+            st.streak += 1
+            streak = st.streak
+            if streak < self.patience:
+                return ReplanDecision(
+                    network, False,
+                    f"hysteresis: win {win:.1%} for {streak}/"
+                    f"{self.patience} consecutive windows",
+                    scales=scales, plans=cand, modelled_s=modelled,
+                    measured_s=measured, win=win, streak=streak)
+            st.streak = 0
+            st.migrations += 1
+            self.events.append({
+                "network": network, "win": win,
+                "modelled_s": modelled, "measured_s": measured,
+                "scales": scales.as_dict(),
+                "migration": st.migrations})
+        return ReplanDecision(network, True,
+                              f"modelled win {win:.1%} >= "
+                              f"{self.threshold:.0%} for {self.patience} "
+                              f"windows", scales=scales, plans=cand,
+                              modelled_s=modelled, measured_s=measured,
+                              win=win, streak=self.patience)
+
+    def snapshot(self) -> dict:
+        """Fitted coefficients + decision state per network (metrics)."""
+        with self._lock:
+            nets = {name: {"windows": len(st.sweeps),
+                           "streak": st.streak,
+                           "migrations": st.migrations,
+                           "scales": st.prior.as_dict()}
+                    for name, st in self._nets.items()}
+            return {"networks": nets, "events": list(self.events)}
+
+
+def partition_with(modules: list[ModuleGraph], objective: str,
+                   scales: CostScales,
+                   paper_faithful: bool = False) -> list[Plan]:
+    """Run the existing partitioner under fitted scales.  Function-level
+    import: partitioner imports schedule, which this module also uses —
+    keeping replan importable without a cycle."""
+    from repro.core.partitioner import partition_network
+    return partition_network(modules, objective=objective,
+                             paper_faithful=paper_faithful, scales=scales)
+
+
+def carry_calibration(old: list[Plan] | None,
+                      new: list[Plan] | None) -> list[Plan] | None:
+    """Candidate plans inherit the live plans' calibration choice per
+    module — a migration must never silently change the quantization
+    semantics a network registered with."""
+    if old is None or new is None:
+        return new
+    cal_by = {p.module: p.calibrate for p in old}
+    return [replace(p, calibrate=cal_by.get(p.module, p.calibrate))
+            for p in new]

@@ -14,7 +14,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field, replace
 
 from repro.core import costmodel as cm
-from repro.core.costmodel import ConvSpec, Cost, ZERO
+from repro.core.costmodel import (IDENTITY_SCALES, ConvSpec, Cost, CostScales,
+                                  ZERO)
 from repro.core.graph import ModuleGraph, Node
 
 
@@ -71,15 +72,35 @@ def fpga_resources(nodes: list[Node], g_par: int = 1) -> Resources:
         sum(cm.FPGA.buffer_bytes(n.spec) for n in nodes))
 
 
-def gpu_cost(nodes: list[Node]) -> Cost:
+def gpu_cost(nodes: list[Node], scales: CostScales | None = None) -> Cost:
     c = ZERO
     for n in nodes:
         c = c + cm.GPU.op_cost(n.spec)
-    return c
+    s = scales or IDENTITY_SCALES
+    return Cost(c.latency * s.gpu, c.energy)
+
+
+def fpga_chain_components(nodes: list[Node], in_bytes: int, out_bytes: int,
+                          g_par: int = 1) -> tuple[Cost, Cost]:
+    """The unscaled ``(compute, transfer)`` halves of an FPGA chain: DHM
+    pipeline compute (priced by the SAME grouping the lowering fusion pass
+    applies — one fill per kernel-fusable group) and the PCIe in+out
+    transfers.  Split out so the online fitter can attribute measured
+    stage time to separate device and link coefficients."""
+    # function-level import: repro.core.passes.backend imports this module
+    # for type info only, but passes/__init__ pulls the whole pipeline in —
+    # importing it lazily keeps schedule importable first in any order
+    from repro.core.passes.fuse import cost_groups
+    comp = ZERO
+    for group in cost_groups(nodes):
+        comp = comp + cm.FPGA.fused_cost([n.spec for n in group],
+                                         [g_par] * len(group))
+    return comp, cm.PCIE.xfer(in_bytes) + cm.PCIE.xfer(out_bytes)
 
 
 def fpga_chain_cost(nodes: list[Node], in_bytes: int, out_bytes: int,
-                    g_par: int = 1) -> Cost:
+                    g_par: int = 1,
+                    scales: CostScales | None = None) -> Cost:
     """A chain executed on the FPGA with DHM fusion; PCIe in and out.
 
     The chain is priced by the SAME grouping the lowering fusion pass
@@ -89,26 +110,19 @@ def fpga_chain_cost(nodes: list[Node], in_bytes: int, out_bytes: int,
     the fill is paid again).  Longer fusable chains therefore genuinely
     reduce per-node FPGA overheads — and the partitioner, pricing with
     this function, learns to prefer them."""
-    # function-level import: repro.core.passes.backend imports this module
-    # for type info only, but passes/__init__ pulls the whole pipeline in —
-    # importing it lazily keeps schedule importable first in any order
-    from repro.core.passes.fuse import cost_groups
-    comp = ZERO
-    for group in cost_groups(nodes):
-        comp = comp + cm.FPGA.fused_cost([n.spec for n in group],
-                                         [g_par] * len(group))
-    xin = cm.PCIE.xfer(in_bytes)
-    xout = cm.PCIE.xfer(out_bytes)
-    return Cost(xin.latency + comp.latency + xout.latency,
-                xin.energy + comp.energy + xout.energy)
+    comp, xfer = fpga_chain_components(nodes, in_bytes, out_bytes, g_par)
+    s = scales or IDENTITY_SCALES
+    return Cost(comp.latency * s.fpga + xfer.latency * s.xfer,
+                comp.energy + xfer.energy)
 
 
 def parallel_cost(gpu_nodes: list[Node], fpga_nodes: list[Node],
                   fpga_in_bytes: int, fpga_out_bytes: int,
-                  g_par: int = 1) -> Cost:
+                  g_par: int = 1, scales: CostScales | None = None) -> Cost:
     """GPU branch ‖ (send + FPGA branch + recv): the paper's max() schedule."""
-    g = gpu_cost(gpu_nodes)
-    f = fpga_chain_cost(fpga_nodes, fpga_in_bytes, fpga_out_bytes, g_par)
+    g = gpu_cost(gpu_nodes, scales)
+    f = fpga_chain_cost(fpga_nodes, fpga_in_bytes, fpga_out_bytes, g_par,
+                        scales)
     return Cost(max(g.latency, f.latency), g.energy + f.energy)
 
 
@@ -121,8 +135,9 @@ def split_spec_in(spec: ConvSpec, frac: float) -> tuple[ConvSpec, ConvSpec]:
             replace(spec, c_in=spec.c_in - g, groups=1))
 
 
-def module_gpu_only(m: ModuleGraph) -> Cost:
-    return gpu_cost(m.nodes)
+def module_gpu_only(m: ModuleGraph,
+                    scales: CostScales | None = None) -> Cost:
+    return gpu_cost(m.nodes, scales)
 
 
 # ---------------------------------------------------------------------------
@@ -136,9 +151,31 @@ def module_gpu_only(m: ModuleGraph) -> Cost:
 # only paid once as pipeline fill.  Energy still sums — overlap moves work
 # in time, it does not remove it.
 
-def plan_stage_costs(m: ModuleGraph, plan: Plan | None,
-                     act_bytes: int = 1) -> list[tuple[str, Cost]]:
-    """Per-stage ``(device, cost)`` of a module under the stage-partition
+@dataclass(frozen=True)
+class StageCost:
+    """One device-tagged stage, decomposed into the UNSCALED model terms
+    the online fitter regresses against: device compute and PCIe transfer
+    (zero for GPU stages).  ``cost(scales)`` re-assembles the scaled
+    ``Cost`` — identity scales reproduce the paper model exactly."""
+    device: str
+    comp: Cost = ZERO        # modelled device compute (unscaled)
+    xfer: Cost = ZERO        # modelled PCIe in+out (unscaled)
+
+    def __add__(self, o: "StageCost") -> "StageCost":
+        return StageCost(self.device, self.comp + o.comp, self.xfer + o.xfer)
+
+    def latency(self, scales: CostScales | None = None) -> float:
+        s = scales or IDENTITY_SCALES
+        dev = s.fpga if self.device == "fpga" else s.gpu
+        return self.comp.latency * dev + self.xfer.latency * s.xfer
+
+    def cost(self, scales: CostScales | None = None) -> Cost:
+        return Cost(self.latency(scales), self.comp.energy + self.xfer.energy)
+
+
+def stage_components(m: ModuleGraph, plan: Plan | None,
+                     act_bytes: int = 1) -> list[StageCost]:
+    """Per-stage model decomposition of a module under the stage-partition
     cut rule: maximal same-device runs in node order, plus the synthesized
     GPU residual-add step for residual modules (so the segmentation is the
     one ``passes/stage.py`` actually executes — an FPGA-ending residual
@@ -146,7 +183,7 @@ def plan_stage_costs(m: ModuleGraph, plan: Plan | None,
     (the honest-accounting rule), GPU segments are plain gpu_cost.  A
     plan-less / all-GPU module is a single stage."""
     if plan is None:
-        out = [("gpu", gpu_cost(m.nodes))]
+        out = [StageCost("gpu", gpu_cost(m.nodes))]
     else:
         segs: list[tuple[str, list[Node]]] = []
         for n in m.nodes:
@@ -159,14 +196,45 @@ def plan_stage_costs(m: ModuleGraph, plan: Plan | None,
         out = []
         for dev, nodes in segs:
             if dev == "gpu":
-                out.append((dev, gpu_cost(nodes)))
+                out.append(StageCost(dev, gpu_cost(nodes)))
             else:
-                out.append((dev, fpga_chain_cost(
+                comp, xfer = fpga_chain_components(
                     nodes, nodes[0].spec.in_bytes(act_bytes),
-                    nodes[-1].spec.out_bytes(act_bytes), plan.g_par)))
+                    nodes[-1].spec.out_bytes(act_bytes), plan.g_par)
+                out.append(StageCost(dev, comp, xfer))
     if m.residual:
-        out.append(("gpu", ZERO))      # elementwise add: priced free
+        out.append(StageCost("gpu"))   # elementwise add: priced free
     return out
+
+
+def plan_stage_costs(m: ModuleGraph, plan: Plan | None, act_bytes: int = 1,
+                     scales: CostScales | None = None
+                     ) -> list[tuple[str, Cost]]:
+    """Per-stage ``(device, cost)`` view of ``stage_components`` — the
+    assembled costs under (optionally fitted) scales."""
+    return [(sc.device, sc.cost(scales))
+            for sc in stage_components(m, plan, act_bytes)]
+
+
+def network_stage_components(modules: list[ModuleGraph],
+                             plans: list[Plan] | None,
+                             act_bytes: int = 1) -> list[StageCost]:
+    """The NETWORK-level stage decomposition: per-module segments merged
+    across module boundaries, plus the final (free) GPU output-reshape
+    step — exactly the stage list ``repro.core.passes.stage`` compiles and
+    ``PipelinedEngine`` executes, so measured per-stage wall times from
+    ``timed_call`` align 1:1 with these components."""
+    plan_by = {p.module: p for p in plans} if plans else {}
+    merged: list[StageCost] = []
+    segments = [sc for m in modules
+                for sc in stage_components(m, plan_by.get(m.name), act_bytes)]
+    segments.append(StageCost("gpu"))
+    for sc in segments:
+        if merged and merged[-1].device == sc.device:
+            merged[-1] = merged[-1] + sc
+        else:
+            merged.append(sc)
+    return merged
 
 
 def pipelined_cost(stages: list[Cost], n_inputs: int = 1) -> Cost:

@@ -8,9 +8,14 @@ hot-swap without draining, async submit/future dispatch, and per-lane
 p50/p99/throughput metrics.  PR 6 adds the fault-tolerance layer: typed
 request-level errors (``errors``), per-entry circuit-breaker failover to
 the GPU-only plan, bounded dispatch retries, per-request deadlines,
-load shedding, straggler watchdog, and graceful drain.  See ``server.py``
-for the guarantees.
+load shedding, straggler watchdog, and graceful drain.  PR 7 closes the
+measurement loop: ``HeteroServer(replanner=Replanner(...))`` samples timed
+batches, re-fits the cost model's device coefficients online, and
+hot-migrates live traffic to a re-partitioned plan when the fitted model
+shows a clear, sustained win (``repro.core.replan``).  See ``server.py``
+and ``docs/architecture.md`` for the guarantees.
 """
+from repro.core.replan import Replanner
 from repro.serving.batcher import (DEFAULT_BUCKETS, DEFAULT_PRIORITY,
                                    DynamicBatcher, LaneKey, Request,
                                    pad_batch, pick_bucket)
@@ -21,6 +26,6 @@ from repro.serving.server import HeteroServer, lane_label
 
 __all__ = ["DEFAULT_BUCKETS", "DEFAULT_PRIORITY", "DeadlineExceeded",
            "DynamicBatcher", "HeteroServer", "LaneKey", "Overloaded",
-           "Request", "ServerClosed", "ServerMetrics", "ServingError",
-           "Shutdown", "lane_label", "pad_batch", "percentile",
-           "pick_bucket"]
+           "Replanner", "Request", "ServerClosed", "ServerMetrics",
+           "ServingError", "Shutdown", "lane_label", "pad_batch",
+           "percentile", "pick_bucket"]

@@ -56,7 +56,11 @@ class ServerMetrics:
         self.backup_dispatches = 0               # monolithic backup launches
         self.drain_flushed = 0                   # batches served during drain
         self.drain_aborted = 0                   # requests Shutdown-rejected
+        self.measured_batches = 0                # timed replan sample batches
+        self.replan_checks = 0                   # replanner decisions taken
+        self.replans = 0                         # plan hot-migrations served
         self.breaker_states: dict[str, str] = {}  # network -> breaker state
+        self.fitted_scales: dict[str, dict] = {}  # network -> fitted coeffs
         self._t_first = None
         self._t_last = None
 
@@ -109,6 +113,11 @@ class ServerMetrics:
         with self._lock:
             self.breaker_states[network] = state
 
+    def set_fitted(self, network: str, scales: dict):
+        """Record the replanner's latest fitted cost coefficients."""
+        with self._lock:
+            self.fitted_scales[network] = dict(scales)
+
     def snapshot(self) -> dict:
         with self._lock:
             lat = list(self._lat)
@@ -139,7 +148,12 @@ class ServerMetrics:
                 "backup_dispatches": self.backup_dispatches,
                 "drain_flushed": self.drain_flushed,
                 "drain_aborted": self.drain_aborted,
+                "measured_batches": self.measured_batches,
+                "replan_checks": self.replan_checks,
+                "replans": self.replans,
                 "breakers": dict(self.breaker_states),
+                "fitted": {k: dict(v)
+                           for k, v in self.fitted_scales.items()},
                 "throughput_rps": (self.completed / span if span > 0
                                    else float("nan")),
             }

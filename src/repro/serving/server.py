@@ -81,6 +81,19 @@ submitted after ``swap_params`` returns are guaranteed the new one.
   * All of it is deterministic under ``repro.runtime.faults`` injection —
     no hardware fault required to exercise any path in CI.
 
+**Online re-partitioning** (PR 7, ``repro.core.replan``).  Constructed
+with ``replanner=Replanner(...)``, the server samples every
+``measure_every``-th primary-mode batch through the engine's timed
+dispatch (per-stage walls on pipelined entries), attributes the measured
+times to the cost model's device/transfer coefficients, and re-fits them
+over a sliding window.  When re-partitioning under the fitted model
+predicts a latency win that clears the replanner's hysteresis (>= 15%
+for >= K consecutive windows by default), the entry hot-migrates:
+``_Entry.migrate`` is the breaker-failover shadow-prepare/atomic-redirect
+generalized to ANY candidate plan set.  ``stats()['replan']`` carries the
+fitted coefficients and migration log; rows served before and after a
+migration each bit-match their own plan generation's batch-1 oracle.
+
 Guarantees:
   * results are bit-identical to ``compile_network`` called one request at
     a time — the engine is batch-invariant, padding rows are inert, and
@@ -107,6 +120,8 @@ import numpy as np
 
 from repro.core.executor import compile_network, compile_pipelined
 from repro.core.hetero import init_network
+from repro.core.replan import Replanner, carry_calibration
+from repro.core.schedule import network_stage_components
 from repro.runtime import faults
 from repro.runtime.resilience import StragglerMonitor
 from repro.serving.batcher import (DEFAULT_BUCKETS, DEFAULT_PRIORITY,
@@ -217,6 +232,12 @@ class _Entry:
                 f"— register(..., calib_x=batch) is required")
         self.prepared = self.engine.prepare(params, calib_x)
         self.c_in = mods[0].nodes[0].spec.c_in
+        # model-side stage decomposition of the LIVE plan set — aligned
+        # 1:1 with the pipelined engine's executable stages, this is what
+        # measured stage times are attributed against (repro.core.replan)
+        self.stage_comps = network_stage_components(mods, plans)
+        self.plan_generation = 0            # bumped by each replan migration
+        self.measure_seq = 0                # batches since registration
         # serializes swap_params against refresh: a stale-engine recompile
         # must never finish AFTER a swap it started BEFORE and silently
         # revert the served parameters to the pre-swap generation
@@ -328,6 +349,30 @@ class _Entry:
                 self.ensure_fallback()
             self.bk_engine = None
 
+    def migrate(self, plans) -> None:
+        """Hot-migrate this entry to a replanner candidate plan set — the
+        breaker-failover machinery generalized from "the GPU-only plan"
+        to ANY plan: shadow-compile, prepare and bucket-warm the new
+        plans' engine first (live traffic keeps flowing on the old one),
+        then atomically redirect under ``swap_lock``.  Batches already
+        dispatched finish on the old plan generation; every batch flushed
+        after this returns serves the new one, and each still bit-matches
+        its own plan's batch-1 oracle.  Candidate plans inherit the live
+        plans' per-module calibration choice (a migration never changes
+        quantization semantics)."""
+        plans = carry_calibration(self.plans, plans)
+        eng = self._compile(self.mods, plans, use_pallas=self.use_pallas)
+        cal = self.calib_x if eng.needs_calibration else None
+        prep = eng.prepare(self.params, cal)
+        eng.warmup(prep, self._warm_shapes(), donate=True)
+        with self.swap_lock:
+            self.plans = plans
+            self.engine = eng
+            self.prepared = prep                # atomic redirect
+            self.stage_comps = network_stage_components(self.mods, plans)
+            self.bk_engine = None   # straggler backup follows the new plans
+            self.plan_generation += 1
+
 
 class HeteroServer:
     """Async dynamic-batching server over ``repro.core.executor``."""
@@ -337,11 +382,19 @@ class HeteroServer:
                  max_queue: int = 1024, breaker_threshold: int = 3,
                  probe_interval_s: float = 0.25, recover_after: int = 2,
                  straggler_factor: float = 4.0,
-                 straggler_min_ms: float = 50.0):
+                 straggler_min_ms: float = 50.0,
+                 replanner: Replanner | None = None,
+                 measure_every: int = 8):
         self.buckets = tuple(sorted(buckets))
         self.use_pallas = use_pallas
         self.in_flight = max(1, int(in_flight))
         self.max_queue = max(1, int(max_queue))
+        # online re-partitioning: every ``measure_every``-th primary-mode
+        # batch dispatches through the engine's timed path (serialized,
+        # per-stage walls), feeds the replanner's fitter, and may trigger
+        # a hot plan migration (repro.core.replan)
+        self._replanner = replanner
+        self.measure_every = max(1, int(measure_every))
         self._breaker_cfg = (breaker_threshold, probe_interval_s,
                              recover_after)
         self.straggler_factor = straggler_factor
@@ -698,12 +751,23 @@ class HeteroServer:
             # its buffer (exec_stats counts the copies saved).  The host
             # array itself survives donation, so the completion path can
             # still re-dispatch it on the straggler backup engine.
-            out = engine(prepared, xb, donate=True)
+            measured = None
+            if self._replanner is not None and entry.mode == "primary":
+                entry.measure_seq += 1
+                if entry.measure_seq % self.measure_every == 0:
+                    # sampled measurement batch: serialized timed dispatch
+                    # with per-stage walls (pipelined) or one total
+                    out, measured = engine.timed_call(prepared, xb,
+                                                      donate=True)
+            if measured is None:
+                out = engine(prepared, xb, donate=True)
         except Exception as e:
             self._dispatch_failure(entry, lane, reqs, e, by_deadline)
             return
         if entry.mode == "primary":
             entry.breaker.record_success()
+        if measured is not None:
+            self._maybe_replan(entry, lane, measured, bucket)
         self._inflight_add(1)
         item = (entry, lane, reqs, bucket, by_deadline, xb, out)
         if self._completions is not None:
@@ -763,6 +827,32 @@ class HeteroServer:
             entry.recover()
             self.metrics.count("recoveries")
         self.metrics.set_breaker(entry.name, entry.breaker.label)
+
+    # -- online re-partitioning --------------------------------------------
+
+    def _maybe_replan(self, entry: _Entry, lane: LaneKey, times,
+                      batch: int) -> None:
+        """Feed one measured batch to the replanner and execute its
+        decision.  Runs on the drain thread, exactly like breaker
+        failover: a migration's shadow compile+warm blocks batching
+        briefly, but the redirect itself is atomic and the queue is never
+        drained.  A failed migration leaves the live plan untouched."""
+        rep = self._replanner
+        rep.observe(entry.name, lane.res, entry.plans, entry.stage_comps,
+                    times, batch)
+        self.metrics.count("measured_batches")
+        decision = rep.consider(entry.name, entry.mods, entry.plans)
+        self.metrics.count("replan_checks")
+        if decision.scales is not None:
+            self.metrics.set_fitted(entry.name, decision.scales.as_dict())
+        if not decision.migrate:
+            return
+        try:
+            entry.migrate(decision.plans)
+        except Exception:
+            self.metrics.count("errors")
+            return
+        self.metrics.count("replans")
 
     # -- completion path ---------------------------------------------------
 
@@ -860,13 +950,18 @@ class HeteroServer:
                               "buckets": e.buckets,
                               "resolutions": e.resolutions,
                               "param_generation": e.prepared.generation,
+                              "plan_generation": e.plan_generation,
+                              "devices": e.engine.devices,
                               "mode": e.mode,
                               "breaker": e.breaker.label,
                               "fallback_ready": e.fb_engine is not None}
                        for name, e in self._entries.items()}
-        return {"server": self.metrics.snapshot(),
-                "state": self._state,
-                "in_flight": self.in_flight,
-                "inflight_batches": self._inflight(),
-                "engines": engines,
-                "executor_cache": cache_stats()}
+        out = {"server": self.metrics.snapshot(),
+               "state": self._state,
+               "in_flight": self.in_flight,
+               "inflight_batches": self._inflight(),
+               "engines": engines,
+               "executor_cache": cache_stats()}
+        if self._replanner is not None:
+            out["replan"] = self._replanner.snapshot()
+        return out

@@ -1,0 +1,167 @@
+"""Edge cases of the stage-cost decomposition (``schedule.stage_components``
+/ ``plan_stage_costs`` / ``network_stage_components``) and the pipeline
+makespan model (``pipelined_cost``): single-device plans, empty and 1-node
+networks, and the sum identities the online fitter (``repro.core.replan``)
+relies on — the stage decomposition must account for exactly the cost the
+monolithic model charges, no more, no less.
+"""
+import pytest
+
+from repro.core.costmodel import Cost, ZERO, CostScales
+from repro.core.graph import NETWORKS, ModuleGraph, fire
+from repro.core.partitioner import ACT_BYTES, partition_network
+from repro.core.schedule import (Plan, fpga_chain_cost, gpu_cost,
+                                 module_gpu_only, network_stage_components,
+                                 pipelined_cost, plan_stage_costs,
+                                 stage_components)
+
+
+def _solo():
+    """A 1-node network: the fire module's squeeze conv on its own."""
+    n = fire("f", 16, 16, 4, 8).nodes[0]
+    return ModuleGraph("solo", "stem", [n], output=n.name)
+
+
+# --- single-device plans -> one stage --------------------------------------
+
+def test_planless_module_is_one_gpu_stage():
+    m = fire("f", 16, 16, 4, 8)
+    stages = plan_stage_costs(m, None)
+    assert len(stages) == 1
+    dev, cost = stages[0]
+    assert dev == "gpu"
+    assert cost.latency == pytest.approx(module_gpu_only(m).latency)
+    assert cost.energy == pytest.approx(module_gpu_only(m).energy)
+
+
+def test_all_gpu_plan_collapses_to_one_stage():
+    m = fire("f", 16, 16, 4, 8)
+    plan = Plan(module=m.name, kind=m.kind, scheme="gpu_only",
+                assign={n.name: "gpu" for n in m.nodes})
+    stages = plan_stage_costs(m, plan)
+    assert len(stages) == 1
+    assert stages[0][0] == "gpu"
+    assert stages[0][1].latency == pytest.approx(
+        module_gpu_only(m).latency)
+
+
+def test_all_fpga_plan_is_one_stage_paying_pcie_once():
+    m = _solo()
+    plan = Plan(module=m.name, kind=m.kind, scheme="fpga",
+                assign={n.name: "fpga" for n in m.nodes})
+    comps = stage_components(m, plan)
+    assert len(comps) == 1 and comps[0].device == "fpga"
+    n = m.nodes[0]
+    expect = fpga_chain_cost([n], n.spec.in_bytes(1), n.spec.out_bytes(1))
+    assert comps[0].cost().latency == pytest.approx(expect.latency)
+    assert comps[0].xfer.latency > 0          # honest-accounting PCIe
+
+
+def test_single_stage_pipeline_has_no_overlap_win():
+    # one stage cannot overlap anything: makespan == n * serial, exactly
+    stage = Cost(2e-3, 5e-3)
+    for n in (1, 4, 33):
+        got = pipelined_cost([stage], n)
+        assert got.latency == pytest.approx(n * stage.latency)
+        assert got.energy == pytest.approx(n * stage.energy)
+
+
+# --- empty / 1-node networks -----------------------------------------------
+
+def test_empty_network_decomposition_is_a_free_gpu_stage():
+    comps = network_stage_components([], None)
+    assert [sc.device for sc in comps] == ["gpu"]
+    assert comps[0].cost() == ZERO
+
+
+def test_pipelined_cost_of_no_stages_is_zero():
+    assert pipelined_cost([], 1) == ZERO
+    assert pipelined_cost([], 16) == ZERO
+
+
+def test_one_node_network_sums_to_monolithic():
+    m = _solo()
+    comps = network_stage_components([m], None)
+    assert sum(sc.latency() for sc in comps) == pytest.approx(
+        module_gpu_only(m).latency)
+    assert sum(sc.cost().energy for sc in comps) == pytest.approx(
+        module_gpu_only(m).energy)
+
+
+# --- sum identities --------------------------------------------------------
+
+def test_stage_sum_matches_gpu_monolithic_per_module():
+    # under a hybrid plan the GPU stages alone must sum to the gpu_cost of
+    # exactly the nodes the plan left on the GPU (no double counting)
+    mods = NETWORKS["mobilenetv2"]()
+    plans = partition_network(mods, paper_faithful=True)
+    by = {p.module: p for p in plans}
+    for m in mods:
+        p = by[m.name]
+        comps = stage_components(m, p, ACT_BYTES)
+        gpu_nodes = [n for n in m.nodes
+                     if not (p.assign.get(n.name) == "fpga"
+                             or n.name in p.gconv)]
+        got = sum((sc.cost() for sc in comps if sc.device == "gpu"),
+                  ZERO)
+        assert got.latency == pytest.approx(
+            gpu_cost(gpu_nodes).latency, rel=1e-9, abs=1e-15)
+
+
+def test_network_merge_preserves_totals():
+    # merging segments across module boundaries must not change the
+    # serial latency/energy total — only the stage count
+    mods = NETWORKS["squeezenet"]()
+    plans = partition_network(mods, paper_faithful=True)
+    by = {p.module: p for p in plans}
+    per_module = [sc for m in mods
+                  for sc in stage_components(m, by.get(m.name), ACT_BYTES)]
+    merged = network_stage_components(mods, plans, ACT_BYTES)
+    assert len(merged) <= len(per_module) + 1
+    assert sum(sc.latency() for sc in merged) == pytest.approx(
+        sum(sc.latency() for sc in per_module))
+    assert sum(sc.cost().energy for sc in merged) == pytest.approx(
+        sum(sc.cost().energy for sc in per_module))
+    # devices strictly alternate after the merge
+    devs = [sc.device for sc in merged]
+    assert all(a != b for a, b in zip(devs, devs[1:]))
+
+
+def test_pipeline_fill_equals_serial_sum():
+    # n=1: the fill IS the serial schedule — pipelining a single input
+    # must price identically to not pipelining it
+    mods = NETWORKS["shufflenetv2"]()
+    plans = partition_network(mods, paper_faithful=True)
+    stages = [sc.cost() for sc in network_stage_components(mods, plans)]
+    assert pipelined_cost(stages, 1).latency == pytest.approx(
+        sum(c.latency for c in stages))
+    # n>1: fill + (n-1) beats of the slowest stage, and overlap never
+    # beats the physics of the slowest stage
+    n = 8
+    got = pipelined_cost(stages, n)
+    beat = max(c.latency for c in stages)
+    assert got.latency == pytest.approx(
+        sum(c.latency for c in stages) + (n - 1) * beat)
+    assert got.latency >= n * beat
+    assert got.latency <= n * sum(c.latency for c in stages)
+    assert got.energy == pytest.approx(
+        n * sum(c.energy for c in stages))
+
+
+def test_scales_touch_latency_only():
+    mods = NETWORKS["mobilenetv2"]()
+    plans = partition_network(mods, paper_faithful=True)
+    s = CostScales(gpu=2.0, fpga=3.0, xfer=5.0)
+    for sc in network_stage_components(mods, plans):
+        scaled, ident = sc.cost(s), sc.cost()
+        assert scaled.energy == pytest.approx(ident.energy)
+        if sc.device == "gpu":
+            assert scaled.latency == pytest.approx(
+                ident.latency * 2.0)       # gpu stages carry no xfer term
+        else:
+            assert scaled.latency == pytest.approx(
+                3.0 * sc.comp.latency + 5.0 * sc.xfer.latency)
+    # identity scales reproduce the unscaled paper model bit-for-bit
+    m = mods[0]
+    assert plan_stage_costs(m, None, scales=CostScales()) == \
+        plan_stage_costs(m, None)

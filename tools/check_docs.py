@@ -1,0 +1,96 @@
+"""Docs link checker: every intra-repo markdown link and every path-like
+code reference in ``docs/*.md`` and ``README.md`` must resolve to a real
+file, so the docs tree cannot silently drift from the code it describes.
+
+Checked:
+  * markdown links ``[text](target)`` whose target is not external
+    (``http(s)://``, ``mailto:``) and not a pure in-page anchor (``#...``)
+    — resolved relative to the file's own directory and the repo root,
+    with any ``#fragment`` stripped first;
+  * inline code spans that LOOK like repo paths: contain a ``/`` and end
+    in a known source extension (``.py .md .json .yml .yaml .toml``).
+    Spans like ``repro.core.replan`` (module dotted paths) or bare
+    identifiers are not paths and are ignored.
+
+Path-like spans may be written repo-relative or package-relative — each
+candidate root in ``CANDIDATES`` is tried (``src/``, ``src/repro/``,
+``src/repro/core/``), matching how the docs naturally abbreviate
+(``passes/stage.py`` for ``src/repro/core/passes/stage.py``).
+
+Exit 0 when everything resolves; exit 1 listing every broken reference.
+No dependencies beyond the standard library — CI runs it before even
+installing the package.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+CANDIDATES = ("", "src", "src/repro", "src/repro/core")
+PATH_EXTS = (".py", ".md", ".json", ".yml", ".yaml", ".toml")
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_SPAN = re.compile(r"``([^`\n]+)``|`([^`\n]+)`")
+
+
+def _sources() -> list[Path]:
+    docs = sorted((ROOT / "docs").glob("*.md")) if (ROOT / "docs").is_dir() \
+        else []
+    readme = ROOT / "README.md"
+    return docs + ([readme] if readme.exists() else [])
+
+
+def _resolves(target: str, base: Path) -> bool:
+    target = target.split("#", 1)[0]
+    if not target:
+        return True                      # pure in-page anchor
+    if (base / target).exists():
+        return True
+    return any((ROOT / c / target).exists() for c in CANDIDATES)
+
+
+def check_file(path: Path) -> list[str]:
+    errors = []
+    text = path.read_text()
+    rel = path.relative_to(ROOT)
+    for lineno, line in enumerate(text.splitlines(), 1):
+        for m in MD_LINK.finditer(line):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            if not _resolves(target, path.parent):
+                errors.append(f"{rel}:{lineno}: broken link ({target})")
+        for m in CODE_SPAN.finditer(line):
+            span = (m.group(1) or m.group(2)).strip()
+            if "/" not in span or not span.endswith(PATH_EXTS):
+                continue
+            if " " in span or span.startswith(("http://", "https://")):
+                continue
+            if not _resolves(span, path.parent):
+                errors.append(f"{rel}:{lineno}: dangling path "
+                              f"reference ({span})")
+    return errors
+
+
+def main() -> int:
+    sources = _sources()
+    if not sources:
+        print("check_docs: nothing to check (no docs/ or README.md)",
+              file=sys.stderr)
+        return 1
+    errors = [e for p in sources for e in check_file(p)]
+    if errors:
+        print(f"check_docs: {len(errors)} broken reference(s):",
+              file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    print(f"check_docs: {len(sources)} file(s) clean "
+          f"({', '.join(str(p.relative_to(ROOT)) for p in sources)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
