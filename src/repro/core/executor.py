@@ -19,6 +19,11 @@ API::
     outs = pipe.run_many(prepared, xs, depth=4)  #  FPGA<->GPU boundary so
                                                  #  micro-batches overlap
 
+    rset = ReplicaSet(engine, mesh)              # data-parallel striping:
+    prepared = rset.prepare(params)              #  one prepared copy per
+    logits = rset(prepared, x, replica=1)        #  data-axis replica, ONE
+                                                 #  shared generation stamp
+
 Plans that opted into prepare-time calibration (``Plan.calibrate``) freeze
 their activation scales from a calibration batch::
 
@@ -140,15 +145,24 @@ class PreparedParams(Mapping):
     parameter generation served a given batch: no two ``prepare`` calls
     ever share a stamp, and the numbering never rewinds — not even when
     ``clear_cache`` forces a recompile onto a fresh engine instance.
+
+    ``placement`` makes the handle's device residency explicit: None (the
+    default) leaves the tree wherever jax put it — byte-identical to the
+    pre-placement behaviour — while a ``jax.sharding.NamedSharding``
+    means every leaf was committed to it at prepare time, so jit runs the
+    whole program on that placement's devices and uncommitted (host)
+    batch inputs follow it there.
+
     The engine unwraps ``.tree`` before dispatch; the ``Mapping``
     interface is preserved so callers that index the raw tree
     (``prepared[mod][site]``) keep working unchanged."""
 
-    __slots__ = ("tree", "generation")
+    __slots__ = ("tree", "generation", "placement")
 
-    def __init__(self, tree: dict, generation: int):
+    def __init__(self, tree: dict, generation: int, placement=None):
         self.tree = tree
         self.generation = generation
+        self.placement = placement
 
     def __getitem__(self, key):
         return self.tree[key]
@@ -160,13 +174,23 @@ class PreparedParams(Mapping):
         return len(self.tree)
 
     def __repr__(self):  # pragma: no cover - debug aid
+        place = "" if self.placement is None else f", placed={self.placement}"
         return (f"PreparedParams(generation={self.generation}, "
-                f"modules={list(self.tree)})")
+                f"modules={list(self.tree)}{place})")
 
 
 def _unwrap(prepared):
     """Accept both the stamped handle and a raw prepared tree."""
     return getattr(prepared, "tree", prepared)
+
+
+def place_tree(tree: dict, placement):
+    """Commit every leaf of a prepared tree to ``placement`` via the
+    elastic-resharding helper (``repro.runtime.resilience.reshard``) —
+    the same device_put walk that re-admits a restored training state
+    onto a new mesh places serving replicas."""
+    from repro.runtime.resilience import reshard
+    return reshard(tree, jax.tree.map(lambda _: placement, tree))
 
 
 class CompiledNetwork:
@@ -187,7 +211,10 @@ class CompiledNetwork:
         self.generation = _GENERATION[0]
         lowered = lower_network(mods, plans, use_pallas)
         self._prepare_fn = lowered.prepare      # jits its own internals
+        self._capture_fn = lowered.capture
+        self._freeze_fn = lowered.freeze
         self.needs_calibration = lowered.needs_calibration
+        self.ema_modules = lowered.ema_modules
         self._jitted = jax.jit(lowered.run)
         # donating variant of the same program: the caller hands over the
         # input-batch buffer and XLA reuses it instead of allocating (one
@@ -202,19 +229,48 @@ class CompiledNetwork:
         # direct callers); keep the accounting race-free
         self._stats_lock = threading.Lock()
 
-    def prepare(self, params, calib_x=None) -> PreparedParams:
+    def prepare(self, params, calib_x=None, *,
+                placement=None) -> PreparedParams:
         """One-time parameter lowering: FPGA weights quantized here (int8
         resident for the GEMM path), GPU weights passed through.  When the
         plans opted into calibration (``needs_calibration``), a calibration
         batch is required and activation scales are frozen from it.
-        Returns a generation-stamped ``PreparedParams`` handle (the stamp
-        is a process-global monotonic prepare counter — hot-swap
-        bookkeeping that survives engine recompiles)."""
+        ``placement`` (a ``NamedSharding``) additionally commits the
+        prepared tree to specific devices — None keeps today's implicit
+        default placement, bit for bit.  Returns a generation-stamped
+        ``PreparedParams`` handle (the stamp is a process-global monotonic
+        prepare counter — hot-swap bookkeeping that survives engine
+        recompiles)."""
         faults.trip("prepare", device=self.devices)
         tree = self._prepare_fn(params, calib_x)
+        if placement is not None:
+            tree = place_tree(tree, placement)
         with self._stats_lock:
             self._exec["prepares"] += 1
-        return PreparedParams(tree, _next_prepare_generation())
+        return PreparedParams(tree, _next_prepare_generation(), placement)
+
+    def capture_scales(self, prepared, x) -> dict:
+        """Capture each calibrated quant site's amplitude statistic on a
+        live batch, run under the CURRENT frozen scales: ``{module:
+        {site: scale}}``.  The online-EMA refinement input
+        (``Plan.calibrate("ema")``); the serving layer filters the result
+        to ``ema_modules`` so non-EMA calibrators stay frozen."""
+        return self._capture_fn(_unwrap(prepared), x)
+
+    def refine_scales(self, prepared, scales, *, alpha: float = 1.0,
+                      _generation: int | None = None) -> PreparedParams:
+        """A new ``PreparedParams`` with captured scales blended into the
+        frozen ones (s' = (1-alpha)*s + alpha*s_batch), re-committed to
+        the handle's placement.  Draws a fresh generation unless the
+        caller supplies one — a ``ReplicaSet`` refines every replica
+        under a single stamp so no batch can mix generations."""
+        tree = self._freeze_fn(_unwrap(prepared), scales, alpha)
+        placement = getattr(prepared, "placement", None)
+        if placement is not None:
+            tree = place_tree(tree, placement)
+        gen = (_generation if _generation is not None
+               else _next_prepare_generation())
+        return PreparedParams(tree, gen, placement)
 
     def _count_call(self, x, donate: bool) -> None:
         key = (tuple(x.shape), str(getattr(x, "dtype", "f32")), donate)
@@ -311,7 +367,10 @@ class PipelinedEngine:
         self.generation = _GENERATION[0]
         lowered = lower_network(mods, plans, use_pallas)
         self._prepare_fn = lowered.prepare
+        self._capture_fn = lowered.capture
+        self._freeze_fn = lowered.freeze
         self.needs_calibration = lowered.needs_calibration
+        self.ema_modules = lowered.ema_modules
         self.stages = lowered.stages
         self._jitted = [
             jax.jit(s.fn) if i == 0 else jax.jit(s.fn, donate_argnums=(2,))
@@ -324,12 +383,18 @@ class PipelinedEngine:
                       "timed_calls": 0}
         self._stats_lock = threading.Lock()
 
-    def prepare(self, params, calib_x=None) -> PreparedParams:
+    def prepare(self, params, calib_x=None, *,
+                placement=None) -> PreparedParams:
         faults.trip("prepare", device=self.devices)
         tree = self._prepare_fn(params, calib_x)
+        if placement is not None:
+            tree = place_tree(tree, placement)
         with self._stats_lock:
             self._exec["prepares"] += 1
-        return PreparedParams(tree, _next_prepare_generation())
+        return PreparedParams(tree, _next_prepare_generation(), placement)
+
+    capture_scales = CompiledNetwork.capture_scales
+    refine_scales = CompiledNetwork.refine_scales
 
     def _slices(self, prepared) -> list:
         """Per-stage prepared-parameter slices (tiny host-side dicts; each
@@ -481,6 +546,185 @@ class PipelinedEngine:
 
     def is_current(self) -> bool:
         return self.generation == _GENERATION[0]
+
+
+class ReplicaPrepared:
+    """Replica-striped prepared state: one placed ``PreparedParams`` per
+    data-axis replica, ALL sharing one generation stamp.  The shared
+    stamp is the atomic-swap invariant — a swap replaces the whole handle
+    at once, so whichever replica serves a batch, the batch carries
+    exactly one parameter generation and generations never mix."""
+
+    __slots__ = ("replicas",)
+
+    def __init__(self, replicas):
+        self.replicas = tuple(replicas)
+        if not self.replicas:
+            raise ValueError("ReplicaPrepared needs at least one replica")
+        if len({p.generation for p in self.replicas}) != 1:
+            raise ValueError("replica handles must share one generation")
+
+    @property
+    def generation(self) -> int:
+        return self.replicas[0].generation
+
+    def __len__(self):
+        return len(self.replicas)
+
+    def __getitem__(self, r: int) -> PreparedParams:
+        return self.replicas[r]
+
+    def __repr__(self):  # pragma: no cover - debug aid
+        return (f"ReplicaPrepared(n={len(self.replicas)}, "
+                f"generation={self.generation})")
+
+
+class ReplicaSet:
+    """Data-parallel replica striping over ONE compiled engine.
+
+    Wraps a ``CompiledNetwork``/``PipelinedEngine`` with the ``data``
+    axis of a ``repro.launch.mesh`` mesh: ``prepare`` lowers the
+    parameters once (one generation stamp) and commits one copy per
+    data-axis replica (``replica_shardings``), and each dispatched batch
+    runs wholly on one replica's devices — jit follows the committed
+    prepared tree, and the host-side batch input follows it there.  Same
+    program, same bits: a row served by any replica equals the batch-1
+    call on any other.
+
+    The engine's call surface is preserved (``__call__``/``timed_call``/
+    ``warmup``/``exec_stats``/``is_current``/``prepare``), so a serving
+    layer treats a ReplicaSet exactly like an engine; the extra
+    ``replica=`` keyword pins a dispatch to one replica.  Striping policy
+    lives in ``pick``/``release``: ``pick`` claims the least-outstanding
+    replica (round-robin tiebreak) and ``release`` returns the slot —
+    callers that skip the accounting get plain round-robin."""
+
+    def __init__(self, engine, mesh):
+        from repro.launch.mesh import replica_shardings
+        self.engine = engine
+        self.mesh = mesh
+        self.shardings = replica_shardings(mesh)
+        self.n_replicas = len(self.shardings)
+        self._rr = 0
+        self._outstanding = [0] * self.n_replicas
+        self._calls = [0] * self.n_replicas
+        self._lock = threading.Lock()
+
+    # -- engine surface ----------------------------------------------------
+
+    @property
+    def signature(self):
+        return self.engine.signature
+
+    @property
+    def devices(self):
+        return self.engine.devices
+
+    @property
+    def use_pallas(self):
+        return self.engine.use_pallas
+
+    @property
+    def needs_calibration(self):
+        return self.engine.needs_calibration
+
+    @property
+    def ema_modules(self):
+        return self.engine.ema_modules
+
+    def is_current(self) -> bool:
+        return self.engine.is_current()
+
+    def prepare(self, params, calib_x=None) -> ReplicaPrepared:
+        """Lower the parameters ONCE (weight quantization + optional
+        calibration — one prepare, one generation stamp), then commit a
+        copy to every replica's placement."""
+        base = self.engine.prepare(params, calib_x)
+        return ReplicaPrepared([
+            PreparedParams(place_tree(base.tree, s), base.generation, s)
+            for s in self.shardings])
+
+    # -- striping policy ---------------------------------------------------
+
+    def _least(self, exclude=()) -> int:
+        cand = [r for r in range(self.n_replicas) if r not in exclude]
+        if not cand:
+            cand = list(range(self.n_replicas))
+        return min(cand, key=lambda r: (self._outstanding[r],
+                                        (r - self._rr) % self.n_replicas))
+
+    def pick(self, exclude=()) -> int:
+        """Claim the least-outstanding replica (round-robin tiebreak on
+        equal load), skipping ``exclude``.  Pairs with ``release``."""
+        with self._lock:
+            r = self._least(exclude)
+            self._outstanding[r] += 1
+            self._rr = (r + 1) % self.n_replicas
+            return r
+
+    def peek(self, exclude=()) -> int:
+        """The replica ``pick`` would choose, WITHOUT claiming it — the
+        cross-replica straggler backup targets this."""
+        with self._lock:
+            return self._least(exclude)
+
+    def release(self, r: int) -> None:
+        with self._lock:
+            if self._outstanding[r] > 0:
+                self._outstanding[r] -= 1
+
+    def _route(self, prepared, replica):
+        if replica is None:
+            with self._lock:
+                replica = self._rr
+                self._rr = (replica + 1) % self.n_replicas
+        handle = (prepared[replica] if isinstance(prepared, ReplicaPrepared)
+                  else prepared)
+        with self._lock:
+            self._calls[replica] += 1
+        return handle, replica
+
+    # -- dispatch ----------------------------------------------------------
+
+    def __call__(self, prepared, x, *, donate: bool = False, replica=None):
+        handle, _ = self._route(prepared, replica)
+        return self.engine(handle, x, donate=donate)
+
+    def timed_call(self, prepared, x, *, donate: bool = False, replica=None):
+        handle, _ = self._route(prepared, replica)
+        return self.engine.timed_call(handle, x, donate=donate)
+
+    def run_many(self, prepared, xs, *, depth: int = 2, replica=None):
+        handle, _ = self._route(prepared, replica)
+        return self.engine.run_many(handle, xs, depth=depth)
+
+    def warmup(self, prepared, shapes, *, donate: bool = False) -> dict:
+        """Warm every (shape, replica) pair: jit compiles per placement,
+        so each replica's program must be built before live traffic."""
+        for r in range(self.n_replicas):
+            self.engine.warmup(prepared[r], shapes, donate=donate)
+        return self.exec_stats()
+
+    def capture_scales(self, prepared, x, *, replica: int = 0) -> dict:
+        handle = (prepared[replica] if isinstance(prepared, ReplicaPrepared)
+                  else prepared)
+        return self.engine.capture_scales(handle, x)
+
+    def refine_scales(self, prepared, scales, *,
+                      alpha: float = 1.0) -> ReplicaPrepared:
+        """EMA-refine every replica under ONE fresh generation stamp."""
+        gen = _next_prepare_generation()
+        return ReplicaPrepared([
+            self.engine.refine_scales(prepared[r], scales, alpha=alpha,
+                                      _generation=gen)
+            for r in range(self.n_replicas)])
+
+    def exec_stats(self) -> dict:
+        with self._lock:
+            per = {"replicas": self.n_replicas,
+                   "replica_calls": list(self._calls),
+                   "replica_outstanding": list(self._outstanding)}
+        return {**self.engine.exec_stats(), **per}
 
 
 _CACHE: dict[tuple, CompiledNetwork] = {}

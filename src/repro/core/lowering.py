@@ -23,6 +23,7 @@ from __future__ import annotations
 from typing import Callable, NamedTuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.graph import ModuleGraph
 from repro.core.passes import run_pipeline, stage_partition
@@ -36,6 +37,9 @@ class LoweredNetwork(NamedTuple):
     needs_calibration: bool
     stages: list             # passes.Stage list (device-boundary cuts);
     #                        # running them back to back == run, bit for bit
+    capture: Callable        # jitted (prepared, x) -> {mod: {site: scale}}
+    freeze: Callable         # (prepared, scales, alpha=1.0) -> prepared'
+    ema_modules: frozenset   # modules whose calibrator refines online
 
 
 def lower_network(mods: list[ModuleGraph], plans: list[Plan] | None,
@@ -65,6 +69,30 @@ def lower_network(mods: list[ModuleGraph], plans: list[Plan] | None,
     prepare_jit = jax.jit(prepare_params)
     capture_jit = jax.jit(capture_scales)
 
+    def freeze(prepared, scales, alpha: float = 1.0):
+        """Merge captured scales into the prepared tree as frozen
+        ``x_scale`` entries.  ``alpha < 1`` blends against an existing
+        frozen scale (s' = (1-alpha)*s + alpha*s_batch) — the EMA
+        refinement step the serving layer runs on live batches; scales
+        are linear in the captured amplitude, so blending scales directly
+        is the EMA over amplitudes."""
+        out = dict(prepared)
+        for name, site_scales in scales.items():
+            mod_prepared = dict(out[name])
+            for site, s in site_scales.items():
+                old = mod_prepared[site].get("x_scale")
+                if old is not None and alpha < 1.0:
+                    # blend on the host: old and s may live on different
+                    # replicas' devices (capture runs on one replica, the
+                    # refined tree lands on each), and the caller
+                    # re-commits the tree to its placement afterwards
+                    s = jnp.asarray((1.0 - alpha) * float(old)
+                                    + alpha * float(s),
+                                    dtype=jnp.asarray(s).dtype)
+                mod_prepared[site] = {**mod_prepared[site], "x_scale": s}
+            out[name] = mod_prepared
+        return out
+
     def prepare(params, calib_x=None):
         prepared = prepare_jit(params)
         if not needs_calibration:
@@ -73,18 +101,15 @@ def lower_network(mods: list[ModuleGraph], plans: list[Plan] | None,
             raise ValueError(
                 "plans request calibration (Plan.calibrate=True): prepare "
                 "needs a calibration batch (prepare(params, calib_x=...))")
-        scales = capture_jit(prepared, calib_x)
-        out = dict(prepared)
-        for name, site_scales in scales.items():
-            mod_prepared = dict(out[name])
-            for site, s in site_scales.items():
-                mod_prepared[site] = {**mod_prepared[site], "x_scale": s}
-            out[name] = mod_prepared
-        return out
+        return freeze(prepared, capture_jit(prepared, calib_x))
 
     def run(prepared, x):
         for name, lm in lowered:
             x = lm.run(prepared[name], x)
         return x.reshape(x.shape[0], -1)
 
-    return LoweredNetwork(prepare, run, needs_calibration, stages)
+    ema_modules = frozenset(name for name, lm in lowered
+                            if lm.ir.calib_sites
+                            and lm.ir.calibrator == "ema")
+    return LoweredNetwork(prepare, run, needs_calibration, stages,
+                          capture_jit, freeze, ema_modules)

@@ -359,9 +359,12 @@ def _lower_pointfree(n: Node):
 
 _SITE_STATS = {
     # amplitude statistic a calibration capture records per quant site;
-    # scale_from_amax turns either into a frozen per-tensor scale
+    # scale_from_amax turns any of them into a frozen per-tensor scale
     "amax": lambda v: jnp.max(jnp.abs(v)),
     "pct99": lambda v: jnp.percentile(jnp.abs(v), 99.0),
+    # per-batch statistic is plain amax; the exponential averaging across
+    # served batches happens at the serving layer (frozen-scale blending)
+    "ema": lambda v: jnp.max(jnp.abs(v)),
 }
 
 

@@ -8,13 +8,18 @@ gconv FPGA slices — is recorded by name.  The backend then emits a
 returns one amplitude statistic per site; ``prepare`` freezes those into
 per-tensor scales, and the run program drops the per-call amax reductions.
 
-Two calibrator kinds (``Plan.calibrate``):
+Three calibrator kinds (``Plan.calibrate``):
 
   * ``True`` / ``"amax"``  absolute max over the calibration batch — no
     clipping, the original behaviour;
   * ``"pct99"``            99th percentile of |activation| — clips the
     outlier tail, trading saturation of rare spikes for finer grid
-    resolution on the bulk of the distribution.
+    resolution on the bulk of the distribution;
+  * ``"ema"``              absolute max at prepare time, then refined
+    online: the serving layer captures the same statistic on the first K
+    served batches and blends it into the frozen scale as an exponential
+    moving average (``repro.serving.server``), so scales converge to the
+    live traffic distribution instead of the calibration batch's.
 
 Plans that do NOT opt in keep per-sample scales (``axis=0``), preserving
 the serving batch-invariance contract exactly as before.  Frozen scales
@@ -26,7 +31,7 @@ from __future__ import annotations
 
 from repro.core.passes.ir import PATH_FQ, PATH_GCONV, PATH_INT8, ModuleIR
 
-CALIBRATORS = ("amax", "pct99")
+CALIBRATORS = ("amax", "pct99", "ema")
 
 
 def calibrator_kind(calibrate) -> str | None:

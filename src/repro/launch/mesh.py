@@ -5,6 +5,13 @@ Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis rides
 the DCI links and composes with ``data`` for batch parallelism (lowest
 inter-pod traffic: gradient all-reduce once per step).
 
+``shape=`` overrides the pod-scale defaults for small deployments: the
+serving layer builds data-only replica meshes (e.g. ``shape=(4,)`` on a
+host forced to 8 devices) without needing 256 chips.  Axis names are
+inferred from the rank — ``("data",)``, ``("data", "model")``,
+``("pod", "data", "model")`` — so downstream code can always address the
+``data`` axis by name.
+
 Defined as functions so importing this module never touches jax device
 state (device count is locked on first jax init).
 """
@@ -12,10 +19,19 @@ from __future__ import annotations
 
 import jax
 
+_AXES_BY_RANK = {1: ("data",), 2: ("data", "model"),
+                 3: ("pod", "data", "model")}
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         shape: tuple | None = None):
+    if shape is None:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+    shape = tuple(int(s) for s in shape)
+    if len(shape) not in _AXES_BY_RANK or any(s < 1 for s in shape):
+        raise ValueError(f"mesh shape must be 1-3 positive axis sizes, "
+                         f"got {shape!r}")
+    axes = _AXES_BY_RANK[len(shape)]
     n = 1
     for s in shape:
         n *= s
@@ -23,7 +39,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     if len(devices) < n:
         raise RuntimeError(
             f"need {n} devices, have {len(devices)} — run under "
-            f"XLA_FLAGS=--xla_force_host_platform_device_count=512")
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n}")
     import numpy as np
     return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
 
@@ -33,3 +49,24 @@ def make_host_mesh():
     import numpy as np
     return jax.sharding.Mesh(
         np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+def replica_shardings(mesh) -> list:
+    """One fully-replicated ``NamedSharding`` per ``data``-axis index of
+    ``mesh`` — the placement list a ``ReplicaSet`` stripes prepared
+    parameters over.  Each entry is a single-slice submesh (one device for
+    a data-only mesh; that slice's model/pod devices otherwise) with an
+    empty ``PartitionSpec``, so committing a tree to it pins every leaf to
+    that replica's devices and jit dispatches the whole batch there."""
+    import numpy as np
+    if "data" not in mesh.axis_names:
+        raise ValueError(f"mesh has no 'data' axis: {mesh.axis_names}")
+    axis = mesh.axis_names.index("data")
+    devs = np.asarray(mesh.devices)
+    out = []
+    for r in range(devs.shape[axis]):
+        sub = np.expand_dims(np.take(devs, r, axis=axis), axis)
+        submesh = jax.sharding.Mesh(sub, mesh.axis_names)
+        out.append(jax.sharding.NamedSharding(
+            submesh, jax.sharding.PartitionSpec()))
+    return out

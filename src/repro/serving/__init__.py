@@ -12,9 +12,15 @@ load shedding, straggler watchdog, and graceful drain.  PR 7 closes the
 measurement loop: ``HeteroServer(replanner=Replanner(...))`` samples timed
 batches, re-fits the cost model's device coefficients online, and
 hot-migrates live traffic to a re-partitioned plan when the fitted model
-shows a clear, sustained win (``repro.core.replan``).  See ``server.py``
-and ``docs/architecture.md`` for the guarantees.
+shows a clear, sustained win (``repro.core.replan``).  PR 8 adds
+replica-striped dispatch: ``register(..., replicas=R)`` prepares one
+parameter copy per data-axis replica of a device mesh and stripes flushed
+batches to the least-outstanding replica, with per-replica in-flight
+slots, per-replica metrics lanes, cross-replica straggler backup, and
+atomic all-replica hot-swap (``repro.core.executor.ReplicaSet``).  See
+``server.py`` and ``docs/architecture.md`` for the guarantees.
 """
+from repro.core.executor import ReplicaPrepared, ReplicaSet
 from repro.core.replan import Replanner
 from repro.serving.batcher import (DEFAULT_BUCKETS, DEFAULT_PRIORITY,
                                    DynamicBatcher, LaneKey, Request,
@@ -26,6 +32,6 @@ from repro.serving.server import HeteroServer, lane_label
 
 __all__ = ["DEFAULT_BUCKETS", "DEFAULT_PRIORITY", "DeadlineExceeded",
            "DynamicBatcher", "HeteroServer", "LaneKey", "Overloaded",
-           "Replanner", "Request", "ServerClosed", "ServerMetrics",
-           "ServingError", "Shutdown", "lane_label", "pad_batch",
-           "percentile", "pick_bucket"]
+           "Replanner", "ReplicaPrepared", "ReplicaSet", "Request",
+           "ServerClosed", "ServerMetrics", "ServingError", "Shutdown",
+           "lane_label", "pad_batch", "percentile", "pick_bucket"]

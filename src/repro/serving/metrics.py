@@ -35,6 +35,9 @@ class ServerMetrics:
         self._lat = deque(maxlen=reservoir)      # seconds, per request
         self._lane_reservoir = lane_reservoir
         self._lanes: dict[str, dict] = {}        # label -> {lat, completed}
+        # replica lanes: "net/r<idx>" -> same stats, one per data-axis
+        # replica of a striped entry (repro.core.executor.ReplicaSet)
+        self._replica_lanes: dict[str, dict] = {}
         self.submitted = 0
         self.completed = 0
         self.failed = 0
@@ -53,7 +56,9 @@ class ServerMetrics:
         self.probes_ok = 0                       # half-open probes that passed
         self.probes_failed = 0                   # half-open probes that failed
         self.straggler_events = 0                # watchdog budget overruns
-        self.backup_dispatches = 0               # monolithic backup launches
+        self.backup_dispatches = 0               # straggler backup launches
+        self.cross_replica_backups = 0           # backups on another replica
+        self.ema_updates = 0                     # online EMA scale refinements
         self.drain_flushed = 0                   # batches served during drain
         self.drain_aborted = 0                   # requests Shutdown-rejected
         self.measured_batches = 0                # timed replan sample batches
@@ -72,7 +77,7 @@ class ServerMetrics:
 
     def record_batch(self, n_real: int, bucket: int, latencies,
                      by_deadline: bool, now: float | None = None,
-                     lane: str | None = None):
+                     lane: str | None = None, replica: str | None = None):
         with self._lock:
             self.batches += 1
             self.completed += n_real
@@ -82,10 +87,13 @@ class ServerMetrics:
             else:
                 self.size_flushes += 1
             self._lat.extend(latencies)
-            if lane is not None:
-                st = self._lanes.setdefault(
-                    lane, {"lat": deque(maxlen=self._lane_reservoir),
-                           "completed": 0, "batches": 0})
+            for label, lanes in ((lane, self._lanes),
+                                 (replica, self._replica_lanes)):
+                if label is None:
+                    continue
+                st = lanes.setdefault(
+                    label, {"lat": deque(maxlen=self._lane_reservoir),
+                            "completed": 0, "batches": 0})
                 st["lat"].extend(latencies)
                 st["completed"] += n_real
                 st["batches"] += 1
@@ -123,6 +131,9 @@ class ServerMetrics:
             lat = list(self._lat)
             lanes = {label: (list(st["lat"]), st["completed"], st["batches"])
                      for label, st in self._lanes.items()}
+            replicas = {label: (list(st["lat"]), st["completed"],
+                                st["batches"])
+                        for label, st in self._replica_lanes.items()}
             span = ((self._t_last - self._t_first)
                     if self._t_first is not None and self._t_last is not None
                     else 0.0)
@@ -146,6 +157,8 @@ class ServerMetrics:
                 "probes_failed": self.probes_failed,
                 "straggler_events": self.straggler_events,
                 "backup_dispatches": self.backup_dispatches,
+                "cross_replica_backups": self.cross_replica_backups,
+                "ema_updates": self.ema_updates,
                 "drain_flushed": self.drain_flushed,
                 "drain_aborted": self.drain_aborted,
                 "measured_batches": self.measured_batches,
@@ -164,4 +177,9 @@ class ServerMetrics:
                     "p50_ms": percentile(ls, 50) * 1e3,
                     "p99_ms": percentile(ls, 99) * 1e3}
             for label, (ls, completed, batches) in lanes.items()}
+        out["replicas"] = {
+            label: {"completed": completed, "batches": batches,
+                    "p50_ms": percentile(ls, 50) * 1e3,
+                    "p99_ms": percentile(ls, 99) * 1e3}
+            for label, (ls, completed, batches) in replicas.items()}
         return out

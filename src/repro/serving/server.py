@@ -36,6 +36,19 @@ bucket would only queue behind them, so the batcher keeps accumulating
 (up to a hard deadline) and flushes a fuller batch when a slot frees.
 Full buckets are never deferred.
 
+**Replica-striped dispatch** (PR 8).  ``register(..., replicas=R)`` (or
+an explicit ``mesh=``) stripes one network's traffic across R data-axis
+replicas of a device mesh: the parameters are prepared ONCE and a copy
+is committed to each replica's devices under one shared generation stamp
+(``repro.core.executor.ReplicaSet``); each flushed batch routes whole to
+the least-outstanding replica (round-robin on ties), ``in_flight``
+becomes a per-replica depth, metrics grow per-replica lanes, and the
+straggler watchdog's backup dispatch fires on a DIFFERENT replica than
+the straggling one.  ``swap_params``/plan migrations swap all replicas
+atomically — no batch ever mixes parameter generations across replicas —
+and every served row still bit-matches the single-device batch-1 oracle
+(same program, same prepared tree; placement only moves it).
+
 **Prepared-parameter hot-swap.**  ``swap_params(net, params)`` prepares
 the new weights on a shadow handle (the expensive half, outside the
 server lock; serialized against stale-engine recompiles)
@@ -118,8 +131,10 @@ import time
 import jax
 import numpy as np
 
-from repro.core.executor import compile_network, compile_pipelined
+from repro.core.executor import (ReplicaSet, compile_network,
+                                 compile_pipelined)
 from repro.core.hetero import init_network
+from repro.launch.mesh import make_production_mesh
 from repro.core.replan import Replanner, carry_calibration
 from repro.core.schedule import network_stage_components
 from repro.runtime import faults
@@ -214,7 +229,9 @@ class _Entry:
     def __init__(self, name, mods, plans, params, input_hw, buckets,
                  use_pallas, calib_x=None, pipelined=False,
                  breaker: _Breaker | None = None,
-                 straggler_factor: float = 4.0):
+                 straggler_factor: float = 4.0,
+                 replicas: int = 1, mesh=None,
+                 ema_batches: int = 16, ema_alpha: float = 0.25):
         self.name = name
         self.mods = mods
         self.plans = plans
@@ -224,13 +241,29 @@ class _Entry:
         self.use_pallas = use_pallas
         self.calib_x = calib_x
         self.pipelined = pipelined
+        # replica striping: an explicit mesh wins; replicas > 1 builds a
+        # data-only mesh over the first ``replicas`` devices.  mesh=None,
+        # replicas=1 keeps the raw engine — the pre-replication path,
+        # byte for byte.
+        self.mesh = mesh
+        if self.mesh is None and int(replicas) > 1:
+            self.mesh = make_production_mesh(shape=(int(replicas),))
         self._compile = compile_pipelined if pipelined else compile_network
-        self.engine = self._compile(mods, plans, use_pallas=use_pallas)
+        self.engine = self._wrap(
+            self._compile(mods, plans, use_pallas=use_pallas))
+        self.replicas = (self.engine.n_replicas
+                         if isinstance(self.engine, ReplicaSet) else 1)
         if self.engine.needs_calibration and calib_x is None:
             raise ValueError(
                 f"{name}: plans request calibration (Plan.calibrate=True) "
                 f"— register(..., calib_x=batch) is required")
         self.prepared = self.engine.prepare(params, calib_x)
+        # online EMA scale refinement budget (Plan.calibrate("ema")):
+        # the first ``ema_batches`` primary batches each blend their
+        # captured amplitudes into the frozen scales
+        self.ema_left = (int(ema_batches)
+                         if getattr(self.engine, "ema_modules", None) else 0)
+        self.ema_alpha = float(ema_alpha)
         self.c_in = mods[0].nodes[0].spec.c_in
         # model-side stage decomposition of the LIVE plan set — aligned
         # 1:1 with the pipelined engine's executable stages, this is what
@@ -252,6 +285,12 @@ class _Entry:
         self.breaker = breaker or _Breaker()
         self.monitor = StragglerMonitor(threshold=straggler_factor)
         self._seq = 0
+
+    def _wrap(self, eng):
+        """Stripe an engine across this entry's mesh when replicated;
+        single-replica entries keep the raw engine (the pre-replication
+        serving path, byte for byte)."""
+        return ReplicaSet(eng, self.mesh) if self.mesh is not None else eng
 
     def input_shape(self, batch: int, res: tuple | None = None) -> tuple:
         return (batch, *(res or self.resolutions[0]), self.c_in)
@@ -288,8 +327,10 @@ class _Entry:
         redirected to it — failover is an atomic pointer swap, not a
         compile on the request path."""
         if self.fb_engine is None or not self.fb_engine.is_current():
-            self.fb_engine = compile_network(self.mods, None,
-                                             use_pallas=self.use_pallas)
+            # the fallback inherits the entry's replica striping, so a
+            # failover keeps serving across the same mesh
+            self.fb_engine = self._wrap(compile_network(
+                self.mods, None, use_pallas=self.use_pallas))
             self.fb_prepared = self.fb_engine.prepare(self.params)
             self.fb_engine.warmup(self.fb_prepared, self._warm_shapes(),
                                   donate=True)
@@ -340,8 +381,8 @@ class _Entry:
         rebuilt too; the straggler backup rebuilds lazily."""
         faults.trip("refresh")
         with self.swap_lock:
-            self.engine = self._compile(self.mods, self.plans,
-                                        use_pallas=self.use_pallas)
+            self.engine = self._wrap(self._compile(
+                self.mods, self.plans, use_pallas=self.use_pallas))
             self.prepared = self.engine.prepare(self.params, self.calib_x)
             self.warmup()
             if self.fb_engine is not None:
@@ -361,7 +402,8 @@ class _Entry:
         plans' per-module calibration choice (a migration never changes
         quantization semantics)."""
         plans = carry_calibration(self.plans, plans)
-        eng = self._compile(self.mods, plans, use_pallas=self.use_pallas)
+        eng = self._wrap(self._compile(self.mods, plans,
+                                       use_pallas=self.use_pallas))
         cal = self.calib_x if eng.needs_calibration else None
         prep = eng.prepare(self.params, cal)
         eng.warmup(prep, self._warm_shapes(), donate=True)
@@ -384,7 +426,8 @@ class HeteroServer:
                  straggler_factor: float = 4.0,
                  straggler_min_ms: float = 50.0,
                  replanner: Replanner | None = None,
-                 measure_every: int = 8):
+                 measure_every: int = 8,
+                 ema_batches: int = 16, ema_alpha: float = 0.25):
         self.buckets = tuple(sorted(buckets))
         self.use_pallas = use_pallas
         self.in_flight = max(1, int(in_flight))
@@ -395,6 +438,13 @@ class HeteroServer:
         # a hot plan migration (repro.core.replan)
         self._replanner = replanner
         self.measure_every = max(1, int(measure_every))
+        # online EMA scale refinement (Plan.calibrate("ema")): budget of
+        # refined batches per entry, and the blend factor per batch
+        self.ema_batches = max(0, int(ema_batches))
+        self.ema_alpha = float(ema_alpha)
+        # widest replica fan-out across entries: scales the dispatch
+        # window the batcher's deadline deferral reads (1 = today's gate)
+        self._max_replicas = 1
         self._breaker_cfg = (breaker_threshold, probe_interval_s,
                              recover_after)
         self.straggler_factor = straggler_factor
@@ -429,7 +479,8 @@ class HeteroServer:
                  input_hw=(96, 96), buckets=None, warm: bool = True,
                  use_pallas: bool | None = None, calib_x=None,
                  pipelined: bool = False,
-                 prewarm_fallback: bool = False) -> dict:
+                 prewarm_fallback: bool = False,
+                 replicas: int = 1, mesh=None) -> dict:
         """Compile, prepare and bucket-warm a network under ``name``.
 
         ``input_hw`` is one (H, W) pair or a list of them: every listed
@@ -447,8 +498,14 @@ class HeteroServer:
         bucket-warms the GPU-only failover plan NOW, bounding a later
         failover pause to the atomic redirect instead of a first-failure
         compile (by default the fallback builds lazily when the breaker
-        trips).  Returns the engine's exec stats after warm-up (one trace
-        per bucket x resolution)."""
+        trips).  ``replicas=R`` (or an explicit ``mesh=``) stripes this
+        network's traffic across R data-axis replicas: the parameters are
+        prepared once and committed per replica (one shared generation
+        stamp), flushed batches route to the least-outstanding replica,
+        and each replica gets its own in-flight slots and metrics lane —
+        requires at least R devices (``make_production_mesh(shape=(R,))``).
+        Returns the engine's exec stats after warm-up (one trace per
+        bucket x resolution, per replica)."""
         if params is None:
             params = init_network(mods, jax.random.PRNGKey(0))
         if use_pallas is None:
@@ -457,12 +514,16 @@ class HeteroServer:
                        input_hw, buckets or self.buckets, use_pallas,
                        calib_x=calib_x, pipelined=pipelined,
                        breaker=_Breaker(*self._breaker_cfg),
-                       straggler_factor=self.straggler_factor)
+                       straggler_factor=self.straggler_factor,
+                       replicas=replicas, mesh=mesh,
+                       ema_batches=self.ema_batches,
+                       ema_alpha=self.ema_alpha)
         if prewarm_fallback and plans is not None:
             entry.ensure_fallback()
         with self._lock:
             self._entries[name] = entry
             self._caps[name] = entry.buckets
+            self._max_replicas = max(self._max_replicas, entry.replicas)
         self.metrics.set_breaker(name, entry.breaker.label)
         return entry.warmup() if warm else entry.engine.exec_stats()
 
@@ -674,8 +735,10 @@ class HeteroServer:
     def _can_dispatch(self) -> bool:
         """Downstream admission signal for the batcher: False while the
         dispatch window is fully occupied (a deadline flush would only
-        queue behind in-flight batches — keep accumulating instead)."""
-        return self._inflight() < self.in_flight
+        queue behind in-flight batches — keep accumulating instead).
+        Replica striping widens the window: ``in_flight`` is a per-replica
+        depth, so R replicas absorb R x in_flight batches."""
+        return self._inflight() < self.in_flight * self._max_replicas
 
     def _drain_loop(self) -> None:
         while not self._stop.is_set():
@@ -727,6 +790,7 @@ class HeteroServer:
         if not live:
             return
         reqs = live
+        engine = replica = None
         try:
             engine, prepared = entry.active()
             if not engine.is_current():
@@ -740,13 +804,21 @@ class HeteroServer:
                 self._probe(entry, xb)
                 # a completed recovery redirects THIS batch already
                 engine, prepared = entry.active()
+            striped = isinstance(engine, ReplicaSet)
             if self._completions is not None:
                 # depth gate BEFORE dispatch: this batch is padded and
                 # ready while at most (in_flight - 1) computations are
                 # still unfinished — at in_flight=2 compute stays
-                # serialized and only host work overlaps it
-                while len(self._outstanding) >= self.in_flight - 1:
+                # serialized and only host work overlaps it.  Replica
+                # striping scales the window: the gate is per replica.
+                window = ((self.in_flight - 1)
+                          * (engine.n_replicas if striped else 1))
+                while len(self._outstanding) >= window:
                     jax.block_until_ready(self._outstanding.pop(0))
+            # replica striping: claim the least-outstanding replica AFTER
+            # the gate (freshest occupancy); released on completion
+            replica = engine.pick() if striped else None
+            rkw = {} if replica is None else {"replica": replica}
             # xb is drain-loop-owned and never read after dispatch: donate
             # its buffer (exec_stats counts the copies saved).  The host
             # array itself survives donation, so the completion path can
@@ -758,18 +830,26 @@ class HeteroServer:
                     # sampled measurement batch: serialized timed dispatch
                     # with per-stage walls (pipelined) or one total
                     out, measured = engine.timed_call(prepared, xb,
-                                                      donate=True)
+                                                      donate=True, **rkw)
             if measured is None:
-                out = engine(prepared, xb, donate=True)
+                out = engine(prepared, xb, donate=True, **rkw)
         except Exception as e:
+            if replica is not None:
+                engine.release(replica)
             self._dispatch_failure(entry, lane, reqs, e, by_deadline)
             return
         if entry.mode == "primary":
             entry.breaker.record_success()
+            if entry.ema_left > 0:
+                # online EMA scale refinement: this batch served under
+                # ``prepared``'s generation; the refined tree redirects
+                # the NEXT flush (atomic, one stamp across all replicas)
+                self._ema_refine(entry, engine, prepared, xb)
         if measured is not None:
             self._maybe_replan(entry, lane, measured, bucket)
         self._inflight_add(1)
-        item = (entry, lane, reqs, bucket, by_deadline, xb, out)
+        item = (entry, lane, reqs, bucket, by_deadline, xb, out,
+                engine, prepared, replica)
         if self._completions is not None:
             self._outstanding.append(out)
             self._completions.put(item)
@@ -828,6 +908,38 @@ class HeteroServer:
             self.metrics.count("recoveries")
         self.metrics.set_breaker(entry.name, entry.breaker.label)
 
+    # -- online EMA scale refinement ---------------------------------------
+
+    def _ema_refine(self, entry: _Entry, engine, prepared, xb) -> None:
+        """One step of the ``Plan.calibrate("ema")`` online calibrator:
+        capture each EMA site's amplitude on the live batch (under the
+        CURRENT frozen scales) and blend it into the frozen scale,
+        ``s' = (1 - alpha) * s + alpha * s_batch``.  The refined tree is
+        a fresh generation, redirected atomically under ``swap_lock`` —
+        the batch that fed the capture keeps its own generation, and a
+        refinement never overwrites a racing ``swap_params`` (it only
+        lands while the handle it refined is still the live one).  On a
+        replicated entry all replicas refine under ONE stamp."""
+        try:
+            # xb was donated to the dispatch above; the host array
+            # survives, a copy keeps the capture's buffer independent
+            scales = engine.capture_scales(prepared, np.array(xb))
+            scales = {m: s for m, s in scales.items()
+                      if m in engine.ema_modules}
+            if not scales:
+                entry.ema_left = 0
+                return
+            refined = engine.refine_scales(prepared, scales,
+                                           alpha=entry.ema_alpha)
+        except Exception:
+            self.metrics.count("errors")
+            return
+        with entry.swap_lock:
+            if entry.prepared is prepared:
+                entry.prepared = refined
+                entry.ema_left -= 1
+                self.metrics.count("ema_updates")
+
     # -- online re-partitioning --------------------------------------------
 
     def _maybe_replan(self, entry: _Entry, lane: LaneKey, times,
@@ -856,13 +968,15 @@ class HeteroServer:
 
     # -- completion path ---------------------------------------------------
 
-    def _watch(self, entry: _Entry, xb, out):
+    def _watch(self, entry: _Entry, xb, out, engine=None, prepared=None,
+               replica=None):
         """Straggler watchdog: poll the async result against the rolling
         budget (``straggler_factor`` x the entry's median completion,
         floored at ``straggler_min_ms``).  Past the budget: count the
-        event and, for pipelined entries, race a backup monolithic
-        dispatch of the same batch — whichever result this returns, the
-        bits match (same plans, same prepared tree contract)."""
+        event and race a backup dispatch of the same batch — on a
+        DIFFERENT replica for replicated entries, on the monolithic
+        engine for pipelined ones.  Whichever result this returns, the
+        bits match (same plans, same prepared generation contract)."""
         budget = entry.monitor.budget()
         if budget is None or not hasattr(out, "is_ready"):
             return out
@@ -871,33 +985,49 @@ class HeteroServer:
         while not out.is_ready():
             if time.monotonic() - t0 > budget:
                 self.metrics.count("straggler_events")
-                backup = self._backup_dispatch(entry, xb)
+                backup = self._backup_dispatch(entry, xb, engine, prepared,
+                                               replica)
                 return out if backup is None else backup
             time.sleep(0.0005)
         return out
 
-    def _backup_dispatch(self, entry: _Entry, xb):
-        """Best-effort monolithic re-dispatch of a straggling pipelined
-        batch; None (= keep waiting on the original) when the entry is
-        monolithic already or the backup itself fails."""
+    def _backup_dispatch(self, entry: _Entry, xb, engine=None,
+                         prepared=None, replica=None):
+        """Best-effort re-dispatch of a straggling batch; None (= keep
+        waiting on the original) when no backup path exists or the backup
+        itself fails.  A replicated entry re-dispatches on the
+        least-outstanding OTHER replica — same prepared generation, same
+        bits, but none of the straggler's device state; non-replicated
+        pipelined entries keep the monolithic backup engine."""
         try:
-            engine = entry.ensure_backup()
-            if engine is None:
+            if (replica is not None and isinstance(engine, ReplicaSet)
+                    and engine.n_replicas > 1):
+                other = engine.peek(exclude=(replica,))
+                self.metrics.count("backup_dispatches")
+                self.metrics.count("cross_replica_backups")
+                # a copy through the donating path: the only variant
+                # warmup traced, and the original xb stays re-usable
+                return engine(prepared, np.array(xb), donate=True,
+                              replica=other)
+            bk = entry.ensure_backup()
+            if bk is None:
                 return None
             self.metrics.count("backup_dispatches")
-            return engine(entry.bk_prepared, xb)
+            return bk(entry.bk_prepared, xb)
         except Exception:
             return None
 
     def _complete(self, entry: _Entry, lane: LaneKey, reqs, bucket: int,
-                  by_deadline: bool, xb, out) -> None:
+                  by_deadline: bool, xb, out, engine=None, prepared=None,
+                  replica=None) -> None:
         """Resolve one dispatched batch: block until the device result
         lands (under the straggler watchdog), de-batch, fulfil futures.
         Callers release the admission slot (their ``finally``), so a
-        crash in here can never double-release it."""
+        crash in here can never double-release it; the replica slot the
+        flush claimed is released HERE, in all paths."""
         t0 = time.monotonic()
         try:
-            out = self._watch(entry, xb, out)
+            out = self._watch(entry, xb, out, engine, prepared, replica)
             jax.block_until_ready(out)
             entry.monitor.record(entry.next_seq(), time.monotonic() - t0)
             # one host copy, then de-batch as numpy views — per-row device
@@ -908,7 +1038,10 @@ class HeteroServer:
             for i, r in enumerate(reqs):
                 self._fulfil(r.future, rows[i])
             self.metrics.record_batch(len(reqs), bucket, lats, by_deadline,
-                                      now=now, lane=lane_label(lane))
+                                      now=now, lane=lane_label(lane),
+                                      replica=(f"{entry.name}/r{replica}"
+                                               if replica is not None
+                                               else None))
         except Exception as e:
             # completion-time failure: the batch's rows get the error — no
             # retry from here (a requeue behind younger completed traffic
@@ -916,6 +1049,9 @@ class HeteroServer:
             for r in reqs:
                 self._reject(r.future, e)
             self.metrics.record_failure(len(reqs))
+        finally:
+            if replica is not None and isinstance(engine, ReplicaSet):
+                engine.release(replica)
 
     def _completion_loop(self) -> None:
         """FIFO completion path (in_flight > 1): batches resolve in
@@ -951,6 +1087,8 @@ class HeteroServer:
                               "resolutions": e.resolutions,
                               "param_generation": e.prepared.generation,
                               "plan_generation": e.plan_generation,
+                              "replica_count": e.replicas,
+                              "ema_left": e.ema_left,
                               "devices": e.engine.devices,
                               "mode": e.mode,
                               "breaker": e.breaker.label,

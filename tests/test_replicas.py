@@ -1,0 +1,364 @@
+"""Replica-striped serving (PR 8): explicit placement on ``PreparedParams``,
+``ReplicaSet`` striping and occupancy policy, atomic all-replica hot-swap,
+cross-replica straggler backup, the online EMA scale calibrator, and the
+``make_production_mesh`` shape override.
+
+Single-device-safe tests run everywhere (tier-1).  Tests that need real
+replicas carry ``@pytest.mark.multidevice`` plus a device-count skip, and
+run in the CI multi-device job under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+from dataclasses import replace
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.executor import (PreparedParams, ReplicaPrepared, ReplicaSet,
+                                 compile_network, plan_signature)
+from repro.core.graph import fire
+from repro.core.hetero import init_network
+from repro.core.partitioner import partition_network
+from repro.launch.mesh import make_production_mesh, replica_shardings
+from repro.serving import HeteroServer
+
+HW, C = (8, 8), 16
+
+
+def _need(n):
+    return pytest.mark.skipif(len(jax.devices()) < n,
+                              reason=f"needs {n} devices (XLA_FLAGS="
+                                     f"--xla_force_host_platform_device_"
+                                     f"count={n})")
+
+
+def _setup():
+    mods = [fire("f", 8, 16, 4, 8)]
+    plans = partition_network(mods, paper_faithful=True)
+    params = init_network(mods, jax.random.PRNGKey(0))
+    return mods, plans, params
+
+
+def _images(n, seed=0):
+    rng = np.random.RandomState(seed)
+    return [0.5 * rng.randn(*HW, C).astype(np.float32) for _ in range(n)]
+
+
+def _oracle(mods, plans, params, imgs):
+    eng = compile_network(mods, plans, use_pallas=False)
+    prep = eng.prepare(params)
+    return [np.asarray(eng(prep, x[None]))[0] for x in imgs]
+
+
+# --- mesh shape override ----------------------------------------------------
+
+def test_make_production_mesh_shape_override():
+    mesh = make_production_mesh(shape=(1,))
+    assert mesh.axis_names == ("data",)
+    assert mesh.devices.shape == (1,)
+    with pytest.raises(ValueError, match="1-3 positive axis sizes"):
+        make_production_mesh(shape=(2, 2, 2, 2))
+    with pytest.raises(ValueError, match="1-3 positive axis sizes"):
+        make_production_mesh(shape=(0,))
+    # defaults unchanged: pod-scale shapes still demand pod-scale devices
+    if len(jax.devices()) < 256:
+        with pytest.raises(RuntimeError, match="need 256 devices"):
+            make_production_mesh()
+
+
+def test_replica_shardings_one_per_data_index():
+    shs = replica_shardings(make_production_mesh(shape=(1,)))
+    assert len(shs) == 1
+    (dev,) = shs[0].device_set
+    assert dev == jax.devices()[0]
+
+
+@pytest.mark.multidevice
+@_need(4)
+def test_replica_shardings_distinct_devices():
+    shs = replica_shardings(make_production_mesh(shape=(4,)))
+    assert len(shs) == 4
+    devs = [tuple(s.device_set) for s in shs]
+    assert len({d for ds in devs for d in ds}) == 4
+
+
+# --- placement on PreparedParams -------------------------------------------
+
+def test_default_placement_none_and_explicit_placement_bitmatch():
+    mods, plans, params = _setup()
+    eng = compile_network(mods, plans, use_pallas=False)
+    p0 = eng.prepare(params)
+    assert p0.placement is None
+    x = np.stack(_images(2, seed=1))
+    base = np.asarray(eng(p0, x))
+    # committing the tree to an explicit single-device placement changes
+    # nothing numerically — same program, same bits
+    (sharding,) = replica_shardings(make_production_mesh(shape=(1,)))
+    p1 = eng.prepare(params, placement=sharding)
+    assert p1.placement is sharding
+    assert p1.generation > p0.generation
+    assert (np.asarray(eng(p1, x)) == base).all()
+
+
+def test_replica_prepared_rejects_mixed_generations():
+    a, b = PreparedParams({}, 1), PreparedParams({}, 2)
+    with pytest.raises(ValueError, match="share one generation"):
+        ReplicaPrepared([a, b])
+    with pytest.raises(ValueError, match="at least one"):
+        ReplicaPrepared([])
+
+
+# --- ReplicaSet -------------------------------------------------------------
+
+def test_replicaset_single_replica_bitmatches_engine():
+    mods, plans, params = _setup()
+    eng = compile_network(mods, plans, use_pallas=False)
+    prep = eng.prepare(params)
+    rset = ReplicaSet(eng, make_production_mesh(shape=(1,)))
+    rprep = rset.prepare(params)
+    assert len(rprep) == 1
+    x = np.stack(_images(3, seed=2))
+    assert (np.asarray(rset(rprep, x)) == np.asarray(eng(prep, x))).all()
+    stats = rset.exec_stats()
+    assert stats["replicas"] == 1 and stats["replica_calls"][0] == 1
+
+
+@pytest.mark.multidevice
+@_need(4)
+def test_replicaset_prepare_one_generation_and_bitmatch_all_replicas():
+    mods, plans, params = _setup()
+    eng = compile_network(mods, plans, use_pallas=False)
+    base_prep = eng.prepare(params)
+    rset = ReplicaSet(eng, make_production_mesh(shape=(4,)))
+    rprep = rset.prepare(params)
+    assert len({rprep[r].generation for r in range(4)}) == 1
+    x = np.stack(_images(2, seed=3))
+    base = np.asarray(eng(base_prep, x))
+    for r in range(4):
+        assert (np.asarray(rset(rprep, x, replica=r)) == base).all()
+        (dev,) = jax.tree.leaves(rprep[r].tree)[0].devices()
+        assert dev == jax.devices()[r]
+
+
+@pytest.mark.multidevice
+@_need(4)
+def test_replicaset_pick_is_least_outstanding_with_exclude():
+    mods, plans, params = _setup()
+    eng = compile_network(mods, plans, use_pallas=False)
+    rset = ReplicaSet(eng, make_production_mesh(shape=(4,)))
+    a, b = rset.pick(), rset.pick()
+    assert a != b                         # round-robin while load is equal
+    c = rset.pick(exclude=(0, 1, 2))
+    assert c == 3
+    assert rset.peek(exclude=(c,)) != c   # peek respects exclusion...
+    before = rset.exec_stats()["replica_outstanding"]
+    rset.peek()
+    assert rset.exec_stats()["replica_outstanding"] == before  # ...no claim
+    rset.release(a)
+    rset.release(a)                       # over-release never goes negative
+    assert rset.exec_stats()["replica_outstanding"][a] == 0
+    # least-outstanding: the freed replica is preferred over loaded ones
+    assert rset.pick() == a
+
+
+# --- replica-striped serving ------------------------------------------------
+
+@pytest.mark.multidevice
+@_need(4)
+def test_striped_serving_bitmatches_batch1_oracle():
+    mods, plans, params = _setup()
+    imgs = _images(40, seed=4)
+    oracle = _oracle(mods, plans, params, imgs)
+    server = HeteroServer(buckets=(1, 4, 8), in_flight=2, max_wait_ms=1.0)
+    server.register("f", mods, plans, params, input_hw=HW, replicas=4)
+    with server:
+        rows = [f.result(timeout=60)
+                for f in [server.submit("f", x) for x in imgs]]
+        snap = server.metrics.snapshot()
+        st = server.stats()["engines"]["f"]
+    for i, (r, o) in enumerate(zip(rows, oracle)):
+        assert (r == o).all(), f"row {i} differs from the batch-1 oracle"
+    assert st["replica_count"] == 4
+    assert sum(st["replica_calls"]) >= snap["batches"]
+    assert sum(v["batches"] for v in snap["replicas"].values()) \
+        == snap["batches"]
+    assert len(snap["replicas"]) > 1      # traffic actually striped
+
+
+@pytest.mark.multidevice
+@_need(2)
+def test_pipelined_entry_stripes_too():
+    mods, plans, params = _setup()
+    imgs = _images(12, seed=5)
+    oracle = _oracle(mods, plans, params, imgs)
+    server = HeteroServer(buckets=(1, 4), in_flight=2, max_wait_ms=1.0)
+    server.register("f", mods, plans, params, input_hw=HW, replicas=2,
+                    pipelined=True)
+    with server:
+        rows = [f.result(timeout=60)
+                for f in [server.submit("f", x) for x in imgs]]
+    for r, o in zip(rows, oracle):
+        assert (np.asarray(r) == o).all()
+
+
+@pytest.mark.multidevice
+@_need(2)
+def test_swap_params_swaps_all_replicas_under_one_generation():
+    mods, plans, params = _setup()
+    params2 = init_network(mods, jax.random.PRNGKey(7))
+    imgs = _images(24, seed=6)
+    o_old = _oracle(mods, plans, params, imgs)
+    o_new = _oracle(mods, plans, params2, imgs)
+    server = HeteroServer(buckets=(1, 4), in_flight=2, max_wait_ms=1.0)
+    server.register("f", mods, plans, params, input_hw=HW, replicas=2)
+    with server:
+        pre = [server.submit("f", x) for x in imgs[:12]]
+        info = server.swap_params("f", params2)
+        entry = server._entries["f"]
+        # every replica handle carries the ONE new generation stamp
+        gens = {entry.prepared[r].generation
+                for r in range(len(entry.prepared))}
+        assert gens == {info["generation"]}
+        post = [server.submit("f", x) for x in imgs[12:]]
+        rows_pre = [f.result(timeout=60) for f in pre]
+        rows_post = [f.result(timeout=60) for f in post]
+    for i, r in enumerate(rows_pre):     # one generation per row, never mixed
+        assert (r == o_old[i]).all() or (r == o_new[i]).all()
+    for i, r in enumerate(rows_post):    # post-swap rows: new generation only
+        assert (r == o_new[12 + i]).all()
+
+
+@pytest.mark.multidevice
+@_need(2)
+def test_cross_replica_backup_dispatch_bitmatches():
+    class _NeverReady:
+        def is_ready(self):
+            return False
+
+    mods, plans, params = _setup()
+    server = HeteroServer(buckets=(1, 4), straggler_min_ms=1.0)
+    server.register("f", mods, plans, params, input_hw=HW, replicas=2)
+    entry = server._entries["f"]
+    for s in range(10):                   # establish a tiny rolling budget
+        entry.monitor.record(s, 0.001)
+    imgs = _images(1, seed=8)
+    xb = np.zeros((1, *HW, C), np.float32)
+    xb[0] = imgs[0]
+    straggler = entry.engine.pick()       # the replica the batch "ran" on
+    out = server._watch(entry, xb, _NeverReady(), entry.engine,
+                        entry.prepared, straggler)
+    assert not isinstance(out, _NeverReady)   # backup result won the race
+    assert (np.asarray(out)[0] == _oracle(mods, plans, params, imgs)[0]).all()
+    snap = server.metrics.snapshot()
+    assert snap["straggler_events"] == 1
+    assert snap["cross_replica_backups"] == 1
+    # the backup fired on a replica OTHER than the straggling one
+    calls = entry.engine.exec_stats()["replica_calls"]
+    assert calls[1 - straggler] >= 1
+
+
+@pytest.mark.multidevice
+@_need(2)
+def test_fallback_inherits_striping():
+    mods, plans, params = _setup()
+    server = HeteroServer(buckets=(1, 4))
+    server.register("f", mods, plans, params, input_hw=HW, replicas=2,
+                    prewarm_fallback=True)
+    entry = server._entries["f"]
+    assert isinstance(entry.fb_engine, ReplicaSet)
+    assert entry.fb_engine.n_replicas == 2
+    assert len({entry.fb_prepared[r].generation for r in range(2)}) == 1
+
+
+# --- EMA activation-scale calibrator ----------------------------------------
+
+def test_ema_calibrator_is_kind_aware_in_plan_signature():
+    mods, plans, _params = _setup()
+    sigs = {plan_signature(mods, [replace(p, calibrate=k) for p in plans],
+                           False)
+            for k in (False, True, "pct99", "ema")}
+    assert len(sigs) == 4                 # no two calibrators ever alias
+    with pytest.raises(ValueError, match="unknown calibrator"):
+        plan_signature(mods, [replace(p, calibrate="emaa") for p in plans],
+                       False)
+
+
+def test_ema_refine_blends_toward_batch_and_restamps():
+    mods, plans, params = _setup()
+    cplans = [replace(p, calibrate="ema") for p in plans]
+    eng = compile_network(mods, cplans, use_pallas=False)
+    assert eng.ema_modules == {"f"}
+    calib = np.stack(_images(4, seed=9))
+    prep = eng.prepare(params, calib)
+    live = 3.0 * np.stack(_images(4, seed=10))   # hotter than the calib batch
+    scales = {m: s for m, s in eng.capture_scales(prep, live).items()
+              if m in eng.ema_modules}
+    refined = eng.refine_scales(prep, scales, alpha=0.5)
+    assert refined.generation > prep.generation
+    site = next(iter(scales["f"]))
+    old = float(prep["f"][site]["x_scale"])
+    new = float(refined["f"][site]["x_scale"])
+    target = float(scales["f"][site])
+    assert abs(new - (0.5 * old + 0.5 * target)) < 1e-6
+    # alpha=0 keeps the frozen scales (and therefore the bits) unchanged
+    frozen = eng.refine_scales(prep, scales, alpha=0.0)
+    x = np.stack(_images(2, seed=11))
+    assert (np.asarray(eng(frozen, x)) == np.asarray(eng(prep, x))).all()
+
+
+def test_server_refines_ema_scales_over_first_k_batches():
+    mods, plans, params = _setup()
+    cplans = [replace(p, calibrate="ema") for p in plans]
+    calib = np.stack(_images(4, seed=12))
+    imgs = _images(20, seed=13)
+    server = HeteroServer(buckets=(1, 4), in_flight=1, max_wait_ms=1.0,
+                          ema_batches=3, ema_alpha=0.3)
+    server.register("f", mods, cplans, params, input_hw=HW, calib_x=calib)
+    g0 = server._entries["f"].prepared.generation
+    with server:
+        rows = [f.result(timeout=60)
+                for f in [server.submit("f", x) for x in imgs]]
+        snap = server.metrics.snapshot()
+        entry = server._entries["f"]
+        # steady state after the budget: served rows bit-match the batch-1
+        # oracle of the CURRENT (refined) prepared handle
+        eng, prep = entry.active()
+        assert (rows[-1] == np.asarray(eng(prep, imgs[-1][None]))[0]).all()
+    assert snap["ema_updates"] == 3
+    assert entry.ema_left == 0
+    assert entry.prepared.generation == g0 + 3   # one stamp per refinement
+    assert len(rows) == len(imgs)
+
+
+def test_amax_calibrator_never_refines_online():
+    mods, plans, params = _setup()
+    cplans = [replace(p, calibrate=True) for p in plans]
+    calib = np.stack(_images(4, seed=14))
+    server = HeteroServer(buckets=(1, 4), max_wait_ms=1.0, ema_batches=8)
+    server.register("f", mods, cplans, params, input_hw=HW, calib_x=calib)
+    g0 = server._entries["f"].prepared.generation
+    with server:
+        for f in [server.submit("f", x) for x in _images(8, seed=15)]:
+            f.result(timeout=60)
+        snap = server.metrics.snapshot()
+    assert snap["ema_updates"] == 0
+    assert server._entries["f"].prepared.generation == g0
+
+
+@pytest.mark.multidevice
+@_need(2)
+def test_ema_refines_all_replicas_under_one_stamp():
+    mods, plans, params = _setup()
+    cplans = [replace(p, calibrate="ema") for p in plans]
+    calib = np.stack(_images(4, seed=16))
+    eng = compile_network(mods, cplans, use_pallas=False)
+    rset = ReplicaSet(eng, make_production_mesh(shape=(2,)))
+    prep = rset.prepare(params, calib)
+    live = np.stack(_images(4, seed=17))
+    scales = rset.capture_scales(prep, live)
+    refined = rset.refine_scales(prep, scales, alpha=0.5)
+    assert len({refined[r].generation for r in range(2)}) == 1
+    assert refined.generation > prep.generation
+    x = np.stack(_images(2, seed=18))
+    assert (np.asarray(rset(refined, x, replica=0))
+            == np.asarray(rset(refined, x, replica=1))).all()
