@@ -52,6 +52,13 @@ Prints ``name,us_per_call,derived`` CSV rows:
          cross-replica straggler backup check (replicas/backup:
          other_replica floor — a stuck dispatch re-runs on a DIFFERENT
          replica, bit-matched); needs XLA_FLAGS to force >= 4 devices
+  frontend HTTP front-door serving (§Front door): an open-loop offered-
+         load sweep through the asyncio door over a live server — real
+         sockets, admission control, typed wire errors — then a drain
+         under load (frontend/door/load<m>x: offered_rps/rps/p50/p99/
+         shed_frac; floors: every 200 row bit-matches the batch-1
+         oracle, every non-200 is a typed wire error with a stable
+         code, and a drain under load answers every in-flight request)
   kernels wall-clock of the kernel reference paths on this host
   roofline per-cell dry-run roofline terms                     (§Roofline)
 
@@ -931,6 +938,158 @@ def roofline_rows():
         return [("roofline/unavailable", 0.0, f"run dryrun first ({e})")]
 
 
+def frontend_rows(n_req=48):
+    """HTTP front-door serving (§Front door): open-loop offered load
+    through real sockets against a live in-process server.
+
+      frontend/door/load<m>x  requests fired at m x the door's measured
+                              closed-loop capacity, each on its own
+                              client thread (open loop: arrivals don't
+                              wait for completions).  Derived: offered
+                              vs achieved rps, p50/p99 ms, shed_frac.
+                              Floors: bitmatch (every 200 row equals the
+                              batch-1 oracle THROUGH the wire) and typed
+                              (every non-200 carries a stable wire code
+                              with a retryable bit — never a traceback).
+      frontend/drain          POST /drain while a burst is in flight:
+                              the fence is immediate, yet every already-
+                              admitted request still gets an answer.
+                              Floor: resolved (no request lost to the
+                              drain) — plus the drain's wall-clock.
+    """
+    import json as _json
+    import threading
+    import urllib.error
+    import urllib.request
+
+    from repro.core.executor import compile_network
+    from repro.core.graph import fire
+    from repro.core.hetero import init_network
+    from repro.core.partitioner import partition_network
+    from repro.frontend import FrontDoor, LocalBackend, ServerThread, wire
+    from repro.frontend.worker import build_server
+    from repro.serving import percentile
+
+    hw, c = (8, 8), 16
+    spec = {"networks": [{"kind": "fire", "name": "tiny", "hw": list(hw),
+                          "c_in": c, "squeeze": 4, "expand": 8, "seed": 0}],
+            "server": {"max_wait_ms": 1.0}}
+    mods = [fire("tiny", hw[0], c, 4, 8)]
+    eng = compile_network(mods, partition_network(mods, paper_faithful=True))
+    prep = eng.prepare(init_network(mods, jax.random.PRNGKey(0)))
+    imgs = [np.asarray(0.5 * jax.random.normal(jax.random.PRNGKey(i),
+                                               (*hw, c)), dtype=np.float32)
+            for i in range(n_req)]
+    refs = [np.asarray(eng(prep, x[None])[0]) for x in imgs]
+    bodies = [_json.dumps(wire.infer_payload("tiny", x)).encode()
+              for x in imgs]
+
+    def post(port, path, data=b"", timeout=60):
+        req = urllib.request.Request(
+            f"http://127.0.0.1:{port}{path}", data=data, method="POST",
+            headers={"Content-Type": "application/json"})
+        try:
+            with urllib.request.urlopen(req, timeout=timeout) as r:
+                return r.status, _json.load(r)
+        except urllib.error.HTTPError as e:
+            return e.code, _json.load(e)
+
+    def open_loop(port, interval_s):
+        """Fire every request on schedule on its own thread (open loop),
+        then collect (status, body, latency_s)."""
+        out = [None] * len(bodies)
+        threads = []
+
+        def one(i):
+            t0 = time.perf_counter()
+            status, body = post(port, "/v1/infer", bodies[i])
+            out[i] = (status, body, time.perf_counter() - t0)
+
+        t_start = time.perf_counter()
+        for i in range(len(bodies)):
+            while time.perf_counter() - t_start < i * interval_s:
+                time.sleep(interval_s / 20)
+            th = threading.Thread(target=one, args=(i,))
+            th.start()
+            threads.append(th)
+        for th in threads:
+            th.join(120)
+        elapsed = time.perf_counter() - t_start
+        return out, elapsed
+
+    def judge(results):
+        """(bitmatch, typed, ok_lats, n_ok, n_shed) over one sweep."""
+        bitmatch, typed, lats, n_ok, n_shed = 1.0, 1.0, [], 0, 0
+        for i, r in enumerate(results):
+            if r is None:
+                typed = 0.0            # a lost request is worse than shed
+                continue
+            status, body, lat = r
+            if status == 200:
+                n_ok += 1
+                lats.append(lat)
+                if not np.array_equal(wire.decode_array(body["result"]),
+                                      refs[i]):
+                    bitmatch = 0.0
+            else:
+                n_shed += 1
+                if not (isinstance(body, dict) and body.get("error")
+                        and "retryable" in body):
+                    typed = 0.0
+        return bitmatch, typed, lats, n_ok, n_shed
+
+    rows = []
+    server = build_server(spec)
+    with ServerThread(FrontDoor(LocalBackend(server))) as h:
+        # closed-loop capacity probe: one client, back to back
+        t0 = time.perf_counter()
+        for b in bodies[:12]:
+            post(h.port, "/v1/infer", b)
+        cap_rps = 12 / (time.perf_counter() - t0)
+        for mult in (0.5, 2.0):
+            interval = 1.0 / max(1e-6, cap_rps * mult)
+            results, elapsed = open_loop(h.port, interval)
+            bitmatch, typed, lats, n_ok, n_shed = judge(results)
+            us = (np.mean(lats) * 1e6) if lats else 0.0
+            rows.append((
+                f"frontend/door/load{mult:g}x", us,
+                f"bitmatch={bitmatch};typed={typed};"
+                f"offered_rps={1.0 / interval:.1f};"
+                f"rps={n_ok / elapsed:.1f};"
+                f"shed_frac={n_shed / len(results):.3f};"
+                f"p50_ms={percentile(lats, 50) * 1e3 if lats else 0:.2f};"
+                f"p99_ms={percentile(lats, 99) * 1e3 if lats else 0:.2f}"))
+
+        # drain under load: a burst is mid-flight when the fence drops
+        results = [None] * 16
+        threads = []
+
+        def fire_one(i):
+            t0 = time.perf_counter()
+            status, body = post(h.port, "/v1/infer", bodies[i])
+            results[i] = (status, body, time.perf_counter() - t0)
+
+        for i in range(16):
+            th = threading.Thread(target=fire_one, args=(i,))
+            th.start()
+            threads.append(th)
+        time.sleep(0.002)
+        t0 = time.perf_counter()
+        _status, drain_body = post(h.port, "/drain", b"")
+        drain_s = time.perf_counter() - t0
+        for th in threads:
+            th.join(60)
+        bitmatch, typed, _lats, n_ok, n_shed = judge(results)
+        resolved = (1.0 if all(r is not None for r in results)
+                    and bitmatch and typed else 0.0)
+        rows.append((
+            "frontend/drain", drain_s * 1e6,
+            f"resolved={resolved};drained={1.0 if drain_body.get('drained') else 0.0};"
+            f"served={n_ok};typed_rejects={n_shed};"
+            f"drain_ms={drain_s * 1e3:.1f}"))
+    return rows
+
+
 SECTIONS = {
     "fig1": fig1_conv_sweep,
     "fig4": fig4_models,
@@ -944,6 +1103,7 @@ SECTIONS = {
     "faults": faults_rows,
     "replan": replan_rows,
     "replicas": replicas_rows,
+    "frontend": frontend_rows,
     "kernels": kernel_bench,
     "roofline": roofline_rows,
 }

@@ -1,0 +1,34 @@
+"""Process-level serving front door (PR 9).
+
+``repro.serving`` answers in-process ``submit()`` calls; this package
+puts a network boundary and a process supervisor in front of it:
+
+  * ``wire``   — JSON-over-HTTP/1.1 protocol; typed serving errors cross
+                 as stable ``code``/``retryable`` wire fields.
+  * ``app``    — ``FrontDoor`` (asyncio HTTP door), ``LocalBackend``
+                 (one in-process ``HeteroServer``), ``TokenBucket``
+                 admission, ``ServerThread`` harness.
+  * ``router`` — ``Router`` (least-outstanding dispatch, health-probe
+                 ejection/reinstatement, one-retry-elsewhere, fleet
+                 drain) over ``LocalWorker``/``ProcWorker`` fleets.
+  * ``worker`` — the ``python -m repro.frontend.worker`` process
+                 entrypoint (spec-driven registration, READY handshake,
+                 SIGTERM graceful drain).
+"""
+from repro.frontend.app import (DRAIN_BUDGET_S, FrontDoor, LocalBackend,
+                                ServerThread, TokenBucket)
+from repro.frontend.router import LocalWorker, ProcWorker, Router
+
+__all__ = ["DRAIN_BUDGET_S", "FrontDoor", "LocalBackend", "ServerThread",
+           "TokenBucket", "LocalWorker", "ProcWorker", "Router",
+           "build_server", "make_door", "wire"]
+
+
+def __getattr__(name):
+    # lazy re-export: importing `worker` here would make
+    # `python -m repro.frontend.worker` warn about the module already
+    # being in sys.modules before runpy executes it as __main__
+    if name in ("build_server", "make_door"):
+        from repro.frontend import worker
+        return getattr(worker, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,371 @@
+"""Asyncio HTTP front door over an in-process ``HeteroServer``.
+
+The last layer between the compiled heterogeneous engine and real
+multiplexed traffic: requests arrive as JSON over HTTP/1.1 (stdlib
+asyncio only — no new dependencies), are admission-checked BEFORE their
+body is read, decoded, submitted to the server's batching lanes with
+their ``deadline_ms``/``priority`` propagated, and answered from the
+request future.  The PR-6 typed errors cross the process boundary as
+stable wire codes instead of tracebacks (``repro.frontend.wire``):
+``Overloaded`` -> 429 + Retry-After, ``DeadlineExceeded`` -> 504,
+``ServerClosed``/``Shutdown`` -> 503.
+
+**Admission path** (cheapest check first, all before deserialization):
+
+  1. drain fence / server state      -> 503 ``shutdown``/``server_closed``
+  2. token bucket (``rate``/``burst``) -> 429 ``overloaded`` (gate=rate)
+  3. pending-futures bound (``max_pending``, read from the server's
+     metrics gauges)                 -> 429 ``overloaded`` (gate=pending)
+  4. body size sanity                -> 413
+  5. ``HeteroServer.submit`` itself  -> per-lane queue bound, typed 429
+
+**Endpoints.**  ``POST /v1/infer`` (inference), ``GET /healthz`` (cheap
+liveness: ok flag + the gauges, served from one
+``ServerMetrics.snapshot()``), ``GET /metrics`` (the full snapshot),
+``POST /drain`` (fence + graceful drain, also wired to SIGTERM).
+
+**Drain.**  ``drain()`` fences new admissions (every later request gets
+a typed 503), then runs ``HeteroServer.shutdown`` off-loop under a hard
+budget — every already-admitted future resolves (row or typed error; the
+PR-6 contract), and the door answers each of them before the sockets
+close.  A drain never hangs: the shutdown call itself is bounded and the
+fence guarantees the in-flight set only shrinks.
+
+``faults.trip("http")`` fires in the handler between decode and submit,
+so front-door failures are injectable in CI exactly like device faults
+(``repro.runtime.faults``).
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import threading
+import time
+
+from repro.frontend import wire
+from repro.runtime import faults
+from repro.serving.errors import DeadlineExceeded, ServerClosed, Shutdown
+
+DRAIN_BUDGET_S = 10.0
+
+
+class TokenBucket:
+    """Classic token bucket: ``rate`` tokens/s, ``burst`` capacity.
+    ``rate=None`` disables the gate.  Not thread-safe — it lives on the
+    event loop (one caller) by construction."""
+
+    def __init__(self, rate: float | None, burst: int = 32):
+        self.rate = rate
+        self.burst = max(1, int(burst))
+        self._tokens = float(self.burst)
+        self._t = time.monotonic()
+
+    def admit(self) -> bool:
+        if self.rate is None:
+            return True
+        now = time.monotonic()
+        self._tokens = min(self.burst,
+                           self._tokens + (now - self._t) * self.rate)
+        self._t = now
+        if self._tokens >= 1.0:
+            self._tokens -= 1.0
+            return True
+        return False
+
+    def retry_after_s(self) -> float:
+        if self.rate is None or self.rate <= 0:
+            return 0.05
+        return max(0.001, (1.0 - self._tokens) / self.rate)
+
+
+class LocalBackend:
+    """One in-process ``HeteroServer`` behind the door — the single-worker
+    backend, and the request semantics every worker process serves.
+
+    The same object backs the router's in-process workers
+    (``repro.frontend.router.LocalWorker``), so wire semantics are ONE
+    code path whether a request crossed a socket or not.
+    """
+
+    def __init__(self, server, *, rate: float | None = None,
+                 burst: int = 64, max_pending: int | None = None,
+                 request_timeout_s: float = 60.0,
+                 drain_budget_s: float = DRAIN_BUDGET_S):
+        self.server = server
+        self.bucket = TokenBucket(rate, burst)
+        self.max_pending = max_pending
+        self.request_timeout_s = request_timeout_s
+        self.drain_budget_s = drain_budget_s
+        self.draining = False
+        self.sheds = 0                     # admission-gate rejections
+        self._drain_result: dict | None = None
+
+    # -- admission (pre-body: nothing here touches the payload) ------------
+
+    def admit(self):
+        """None to admit, else a (status, body, headers) shed reply.
+        Called after the request HEAD is parsed and before the body is
+        read — an overloaded door never pays deserialization for a
+        request it rejects."""
+        if self.draining:
+            return wire.error_reply(Shutdown("draining: admission fenced"))
+        if self.server.state != "running":
+            return wire.error_reply(ServerClosed(
+                f"server is {self.server.state}, not running"))
+        if not self.bucket.admit():
+            self.sheds += 1
+            return wire.shed_reply("rate",
+                                   retry_after_s=self.bucket.retry_after_s())
+        if self.max_pending is not None:
+            gauges = self.server.metrics.snapshot()["gauges"]
+            if gauges.get("pending_requests", 0) >= self.max_pending:
+                self.sheds += 1
+                return wire.shed_reply("pending")
+        return None
+
+    # -- request path ------------------------------------------------------
+
+    async def infer(self, payload: dict):
+        """(status, body, headers) for one decoded /v1/infer payload."""
+        try:
+            faults.trip("http")
+            x = wire.decode_array(payload)
+            fut = self.server.submit(
+                payload["network"], x,
+                priority=int(payload.get("priority", 1)),
+                deadline_ms=payload.get("deadline_ms"))
+        except Exception as e:
+            return wire.error_reply(e)
+        try:
+            row = await asyncio.wait_for(asyncio.wrap_future(fut),
+                                         self.request_timeout_s)
+        except asyncio.TimeoutError:
+            # the future may still resolve — answer 504 NOT retryable so
+            # no router re-issues a possibly-still-running request
+            return wire.error_reply(DeadlineExceeded(
+                f"no result within {self.request_timeout_s}s",
+                waited_s=self.request_timeout_s))
+        except Exception as e:
+            return wire.error_reply(e)
+        return 200, {"network": payload["network"],
+                     "result": wire.encode_array(row)}, {}
+
+    async def health(self):
+        snap = self.server.metrics.snapshot()
+        gauges = snap.get("gauges", {})
+        ok = (not self.draining
+              and gauges.get("state", self.server.state) == "running")
+        body = {"ok": ok, "state": gauges.get("state", self.server.state),
+                "draining": self.draining,
+                "uptime_s": snap.get("uptime_s", 0.0),
+                "pending_requests": gauges.get("pending_requests", 0),
+                "inflight_batches": gauges.get("inflight_batches", 0),
+                "queue_total": gauges.get("queue_total", 0),
+                "queue_depth": gauges.get("queue_depth", {}),
+                "completed": snap.get("completed", 0),
+                "shed": snap.get("shed", 0) + self.sheds}
+        return (200 if ok else 503), body, {}
+
+    async def metrics(self):
+        return 200, self.server.metrics.snapshot(), {}
+
+    async def drain(self, budget_s: float | None = None):
+        """Fence admissions, then gracefully shut the server down off-loop
+        under a hard budget.  Idempotent; never hangs."""
+        if self._drain_result is not None:
+            return 200, self._drain_result, {}
+        self.draining = True
+        budget = budget_s if budget_s is not None else self.drain_budget_s
+        t0 = time.monotonic()
+        loop = asyncio.get_running_loop()
+        try:
+            await asyncio.wait_for(
+                loop.run_in_executor(None, self.server.shutdown, budget),
+                budget + 1.0)
+            timed_out = False
+        except asyncio.TimeoutError:    # wedged drain thread: report, the
+            timed_out = True            # sweep already fenced admissions
+        snap = self.server.metrics.snapshot()
+        self._drain_result = {
+            "drained": not timed_out,
+            "elapsed_s": time.monotonic() - t0,
+            "pending_requests": snap["gauges"].get("pending_requests", 0),
+            "drain_aborted": snap.get("drain_aborted", 0),
+            "drain_flushed": snap.get("drain_flushed", 0)}
+        return 200, self._drain_result, {}
+
+
+class FrontDoor:
+    """The HTTP surface: routes requests on one asyncio server to any
+    backend exposing ``admit``/``infer``/``health``/``metrics``/``drain``
+    (``LocalBackend`` for a worker process, ``repro.frontend.router.
+    Router`` for the multi-worker door)."""
+
+    def __init__(self, backend, *, host: str = "127.0.0.1", port: int = 0):
+        self.backend = backend
+        self.host = host
+        self.port = port
+        self._srv: asyncio.AbstractServer | None = None
+        self.requests = 0
+
+    async def start(self) -> "FrontDoor":
+        self._srv = await asyncio.start_server(self._handle, self.host,
+                                               self.port)
+        self.port = self._srv.sockets[0].getsockname()[1]
+        return self
+
+    async def aclose(self) -> None:
+        if self._srv is not None:
+            self._srv.close()
+            await self._srv.wait_closed()
+            self._srv = None
+
+    async def drain_and_close(self, budget_s: float | None = None) -> dict:
+        """SIGTERM path: fence + drain the backend, then stop listening.
+        In-flight handler tasks still hold their sockets and answer."""
+        _status, body, _h = await self.backend.drain(budget_s)
+        await self.aclose()
+        return body
+
+    # -- connection handler ------------------------------------------------
+
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        try:
+            head = await wire.read_head(reader)
+            if head is None:
+                return
+            method, path, headers = head
+            self.requests += 1
+            status, body, extra = await self._route(method, path, headers,
+                                                    reader)
+            writer.write(wire.response_bytes(status, body, extra))
+            await writer.drain()
+        except (ConnectionError, asyncio.IncompleteReadError):
+            pass                        # client went away: nothing to answer
+        except Exception as e:          # defensive: no traceback on the wire
+            try:
+                writer.write(wire.response_bytes(*wire.error_reply(e)))
+                await writer.drain()
+            except Exception:
+                pass
+        finally:
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except Exception:
+                pass
+
+    async def _route(self, method: str, path: str, headers: dict, reader):
+        path = path.split("?", 1)[0]
+        if path == "/healthz" and method == "GET":
+            return await self.backend.health()
+        if path == "/metrics" and method == "GET":
+            return await self.backend.metrics()
+        if path == "/drain" and method == "POST":
+            return await self.backend.drain()
+        if path != "/v1/infer":
+            return 404, {"error": "not_found", "retryable": False,
+                         "message": path}, {}
+        if method != "POST":
+            return 405, {"error": "method_not_allowed", "retryable": False,
+                         "message": method}, {}
+        # admission BEFORE the body: shed work, not just requests
+        shed = self.backend.admit()
+        if shed is not None:
+            await self._discard_body(reader, headers)
+            return shed
+        if int(headers.get("content-length", 0) or 0) > wire.MAX_BODY_BYTES:
+            return 413, {"error": "payload_too_large",
+                         "retryable": False, "message": ""}, {}
+        raw = await wire.read_body(reader, headers)
+        try:
+            payload = json.loads(raw)
+        except Exception as e:
+            return 400, {"error": "bad_request", "retryable": False,
+                         "message": f"invalid JSON: {e}"}, {}
+        return await self.backend.infer(payload)
+
+    @staticmethod
+    async def _discard_body(reader, headers) -> None:
+        """Drain a shed request's body so the client can read the reply
+        (a closed pipe mid-upload reads as a transport error, and a
+        transport error would be retried — a shed must stay typed)."""
+        try:
+            await wire.read_body(reader, headers)
+        except Exception:
+            pass
+
+
+class ServerThread:
+    """Run a ``FrontDoor`` (and optionally extra startup coroutines, e.g.
+    ``Router.start``) on a dedicated event loop in a daemon thread — the
+    handle tests, benchmarks and examples drive blocking HTTP clients
+    against.
+
+        with ServerThread(FrontDoor(LocalBackend(server))) as h:
+            requests -> 127.0.0.1:h.port
+    """
+
+    def __init__(self, door: FrontDoor, *, also_start=()):
+        self.door = door
+        self._also = list(also_start)   # extra "async def start()" objects
+        self.loop = asyncio.new_event_loop()
+        self._ready = threading.Event()
+        self._thread = threading.Thread(target=self._run,
+                                        name="frontdoor-loop", daemon=True)
+
+    def _run(self) -> None:
+        asyncio.set_event_loop(self.loop)
+
+        async def boot():
+            for obj in self._also:
+                await obj.start()
+            await self.door.start()
+            self._ready.set()
+
+        self.loop.run_until_complete(boot())
+        self.loop.run_forever()
+        # cancel stragglers so the loop closes clean
+        for task in asyncio.all_tasks(self.loop):
+            task.cancel()
+        try:
+            self.loop.run_until_complete(
+                self.loop.shutdown_asyncgens())
+        except Exception:
+            pass
+        self.loop.close()
+
+    def start(self) -> "ServerThread":
+        self._thread.start()
+        if not self._ready.wait(30.0):
+            raise RuntimeError("front door failed to start in 30s")
+        return self
+
+    @property
+    def port(self) -> int:
+        return self.door.port
+
+    def call(self, coro, timeout: float = 60.0):
+        """Run one coroutine on the door's loop from any thread."""
+        fut = asyncio.run_coroutine_threadsafe(coro, self.loop)
+        return fut.result(timeout)
+
+    def stop(self, drain: bool = True, budget_s: float = DRAIN_BUDGET_S):
+        out = None
+        if self._thread.is_alive():
+            if drain:
+                try:
+                    out = self.call(self.door.drain_and_close(budget_s),
+                                    timeout=budget_s + 5.0)
+                except Exception:
+                    pass
+            self.loop.call_soon_threadsafe(self.loop.stop)
+            self._thread.join(10.0)
+        return out
+
+    def __enter__(self) -> "ServerThread":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

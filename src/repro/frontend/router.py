@@ -1,0 +1,455 @@
+"""Multi-worker router: PR 6's circuit breaker lifted to the process level.
+
+``Router`` fronts N shared-nothing workers (each its own ``HeteroServer``
+residency — a separate OS process via ``ProcWorker``, or an in-process
+``LocalWorker`` for CI-speed tests and benchmarks; both serve the same
+``LocalBackend`` request semantics).  It implements the same backend
+protocol as ``repro.frontend.app.LocalBackend``, so one ``FrontDoor``
+serves either a single worker or a whole fleet.
+
+**Dispatch.**  Least-outstanding among healthy workers (round-robin on
+ties).  ``faults.trip("worker", device=<name>)`` fires per forward, so a
+worker-path failure is injectable in CI like a device fault.
+
+**Retry.**  Exactly ONE re-issue, on a DIFFERENT worker, after a jittered
+backoff — and only for failures where the first attempt definitely did
+not answer: transport errors (connection refused/reset — the channel is
+dead, at most the compute happened twice but the client is answered
+once) and wire responses marked ``retryable`` (429/503 typed sheds — the
+request was never admitted/served).  504s and other non-retryable codes
+return as-is: re-issuing a possibly-still-running request could answer
+it twice.
+
+**Health.**  A probe loop GETs each worker's ``/healthz`` (backed by its
+``ServerMetrics.snapshot()``): ``eject_after`` consecutive failures —
+probe or live-dispatch transport failures alike — eject the worker from
+rotation; while ejected, probes continue, and ``reinstate_after``
+consecutive passes put it back (the breaker's closed/open/half-open
+cycle, per process).  A dead process (``alive()`` False) is ejected
+immediately and respawned from its spec — crash-resume re-REGISTERS the
+networks (deterministic params per spec, so the respawn serves
+bit-identical rows) and rejoins via the same probe-based reinstatement.
+
+**Admission.**  Token bucket + total-outstanding bound at the door,
+checked before the request body is even read (``FrontDoor`` calls
+``admit()`` between headers and body).
+
+**Drain.**  ``drain()`` fences admission (typed 503 from then on), waits
+for the router's own in-flight forwards to settle, then drains every
+worker in parallel — each worker's ``HeteroServer.shutdown`` resolves
+every admitted future (PR-6 contract) — all under one hard budget, so a
+SIGTERM never hangs even with a wedged worker (it is killed at the
+budget's edge).
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import os
+import random
+import signal
+import subprocess
+import sys
+import time
+
+from repro.frontend import wire
+from repro.frontend.app import DRAIN_BUDGET_S, LocalBackend, TokenBucket
+from repro.runtime import faults
+from repro.serving.errors import Shutdown
+
+RETRYABLE_EXC = (ConnectionError, OSError, asyncio.TimeoutError,
+                 asyncio.IncompleteReadError, faults.InjectedFault)
+
+
+class LocalWorker:
+    """An in-process worker: its own ``HeteroServer`` behind the same
+    ``LocalBackend`` semantics a worker process serves, minus the socket.
+    ``crash()`` emulates process death deterministically: dispatches
+    raise ``ConnectionError``, and the orphaned server's admitted futures
+    resolve typed via shutdown — exactly what a supervisor sees when a
+    real worker dies mid-request."""
+
+    def __init__(self, name: str, factory, *, door: dict | None = None):
+        self.name = name
+        self.factory = factory               # () -> started HeteroServer
+        self._door_cfg = dict(door or {})
+        self.server = factory()
+        self.backend = LocalBackend(self.server, **self._door_cfg)
+        self._dead = False
+        self.outstanding = 0
+        self.state = "healthy"               # router-managed: | "ejected"
+        self.fails = 0
+        self.oks = 0
+        self.restarting = False
+        self.restarts = 0
+
+    def alive(self) -> bool:
+        return not self._dead
+
+    def crash(self) -> None:
+        """Simulate the process dying NOW."""
+        self._dead = True
+        srv = self.server
+        import threading
+        threading.Thread(target=lambda: srv.shutdown(2.0),
+                         daemon=True).start()
+
+    async def restart(self) -> None:
+        loop = asyncio.get_running_loop()
+        self.server = await loop.run_in_executor(None, self.factory)
+        self.backend = LocalBackend(self.server, **self._door_cfg)
+        self._dead = False
+        self.restarts += 1
+
+    async def infer(self, payload: dict):
+        if self._dead:
+            raise ConnectionError(f"{self.name}: worker dead")
+        shed = self.backend.admit()
+        if shed is not None:
+            return shed
+        out = await self.backend.infer(payload)
+        if self._dead:
+            # died while serving: the socket would have reset before the
+            # response left the process
+            raise ConnectionError(f"{self.name}: worker died mid-request")
+        return out
+
+    async def healthz(self):
+        if self._dead:
+            raise ConnectionError(f"{self.name}: worker dead")
+        return await self.backend.health()
+
+    async def drain(self, budget_s: float) -> None:
+        if not self._dead:
+            await self.backend.drain(budget_s)
+
+    def terminate(self) -> None:
+        self.crash()
+
+
+class ProcWorker:
+    """A worker OS process (``python -m repro.frontend.worker``) plus the
+    HTTP client half: spawn, READY handshake, JSON requests, SIGTERM
+    drain, kill.  ``restart()`` respawns from the same spec — the
+    crash-resume path."""
+
+    def __init__(self, name: str, spec: dict, *,
+                 startup_timeout_s: float = 120.0,
+                 request_timeout_s: float = 60.0,
+                 probe_timeout_s: float = 5.0):
+        self.name = name
+        self.spec = dict(spec)
+        self.spec.setdefault("port", 0)
+        self.startup_timeout_s = startup_timeout_s
+        self.request_timeout_s = request_timeout_s
+        self.probe_timeout_s = probe_timeout_s
+        self.proc: subprocess.Popen | None = None
+        self.host = "127.0.0.1"
+        self.port: int | None = None
+        self.outstanding = 0
+        self.state = "healthy"
+        self.fails = 0
+        self.oks = 0
+        self.restarting = False
+        self.restarts = 0
+
+    # -- process lifecycle -------------------------------------------------
+
+    def _spawn(self) -> None:
+        env = dict(os.environ)
+        src = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__)))))
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        self.proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.frontend.worker",
+             "--spec", json.dumps(self.spec)],
+            stdout=subprocess.PIPE, stderr=subprocess.DEVNULL,
+            env=env, text=True)
+        t_end = time.monotonic() + self.startup_timeout_s
+        while time.monotonic() < t_end:
+            line = self.proc.stdout.readline()
+            if not line:
+                break
+            if line.startswith("READY"):
+                fields = dict(kv.split("=", 1)
+                              for kv in line.split()[1:] if "=" in kv)
+                self.host = fields.get("host", "127.0.0.1")
+                self.port = int(fields["port"])
+                return
+        raise RuntimeError(f"{self.name}: worker never became READY")
+
+    async def start(self) -> "ProcWorker":
+        loop = asyncio.get_running_loop()
+        await loop.run_in_executor(None, self._spawn)
+        return self
+
+    def alive(self) -> bool:
+        return self.proc is not None and self.proc.poll() is None
+
+    async def restart(self) -> None:
+        if self.alive():
+            self.terminate()
+        await self.start()
+        self.restarts += 1
+
+    def terminate(self) -> None:
+        if self.proc is not None and self.proc.poll() is None:
+            self.proc.kill()
+            self.proc.wait(5.0)
+
+    # -- request path ------------------------------------------------------
+
+    async def infer(self, payload: dict):
+        status, headers, body = await wire.http_json(
+            self.host, self.port, "POST", "/v1/infer", payload,
+            timeout=self.request_timeout_s)
+        return status, body, dict(headers)
+
+    async def healthz(self):
+        status, _headers, body = await wire.http_json(
+            self.host, self.port, "GET", "/healthz",
+            timeout=self.probe_timeout_s)
+        return status, body, {}
+
+    async def drain(self, budget_s: float) -> None:
+        """SIGTERM-initiated graceful drain; hard-kill at the budget."""
+        if not self.alive():
+            return
+        self.proc.send_signal(signal.SIGTERM)
+        loop = asyncio.get_running_loop()
+        try:
+            await asyncio.wait_for(
+                loop.run_in_executor(None, self.proc.wait),
+                budget_s)
+        except asyncio.TimeoutError:
+            self.terminate()
+
+
+class Router:
+    """Health-checked least-outstanding dispatch over a worker fleet.
+    Implements the front-door backend protocol (``admit``/``infer``/
+    ``health``/``metrics``/``drain``)."""
+
+    def __init__(self, workers, *, rate: float | None = None,
+                 burst: int = 64, max_outstanding: int | None = None,
+                 eject_after: int = 3, reinstate_after: int = 2,
+                 probe_interval_s: float = 0.05,
+                 probe_timeout_s: float = 2.0,
+                 retry_backoff_s: float = 0.01,
+                 auto_restart: bool = True,
+                 drain_budget_s: float = DRAIN_BUDGET_S,
+                 seed: int = 0):
+        self.workers = list(workers)
+        if not self.workers:
+            raise ValueError("Router needs at least one worker")
+        self.bucket = TokenBucket(rate, burst)
+        self.max_outstanding = max_outstanding
+        self.eject_after = max(1, int(eject_after))
+        self.reinstate_after = max(1, int(reinstate_after))
+        self.probe_interval_s = probe_interval_s
+        self.probe_timeout_s = probe_timeout_s
+        self.retry_backoff_s = retry_backoff_s
+        self.auto_restart = auto_restart
+        self.drain_budget_s = drain_budget_s
+        self.draining = False
+        self._rng = random.Random(seed)
+        self._rr = 0                          # round-robin tiebreaker
+        self._outstanding = 0
+        self._probe_task: asyncio.Task | None = None
+        self.counters = {"dispatched": 0, "retries": 0, "sheds": 0,
+                         "ejections": 0, "reinstatements": 0,
+                         "restarts": 0, "no_worker": 0, "probes": 0}
+
+    # -- lifecycle ---------------------------------------------------------
+
+    async def start(self) -> "Router":
+        for w in self.workers:
+            if isinstance(w, ProcWorker) and w.port is None:
+                await w.start()
+        self._probe_task = asyncio.ensure_future(self._probe_loop())
+        return self
+
+    async def aclose(self) -> None:
+        if self._probe_task is not None:
+            self._probe_task.cancel()
+            try:
+                await self._probe_task
+            except (asyncio.CancelledError, Exception):
+                pass
+            self._probe_task = None
+
+    # -- admission (pre-body) ----------------------------------------------
+
+    def admit(self):
+        if self.draining:
+            return wire.error_reply(Shutdown("router draining: admission "
+                                             "fenced"))
+        if not self.bucket.admit():
+            self.counters["sheds"] += 1
+            return wire.shed_reply(
+                "rate", retry_after_s=self.bucket.retry_after_s())
+        if (self.max_outstanding is not None
+                and self._outstanding >= self.max_outstanding):
+            self.counters["sheds"] += 1
+            return wire.shed_reply("outstanding")
+        return None
+
+    # -- dispatch ----------------------------------------------------------
+
+    def _healthy(self, exclude=()):
+        return [w for w in self.workers
+                if w.state == "healthy" and w.alive() and w not in exclude]
+
+    def _pick(self, exclude=()):
+        pool = self._healthy(exclude)
+        if not pool:
+            return None
+        lo = min(w.outstanding for w in pool)
+        pool = [w for w in pool if w.outstanding == lo]
+        self._rr += 1
+        return pool[self._rr % len(pool)]
+
+    async def _forward(self, w, payload: dict):
+        """One attempt on one worker.  Transport failures come back as a
+        typed retryable 503 (and feed the worker's ejection count) — the
+        retry decision upstream only ever reads (status, body)."""
+        w.outstanding += 1
+        self._outstanding += 1
+        try:
+            faults.trip("worker", device=w.name)
+            return await w.infer(payload)
+        except RETRYABLE_EXC as e:
+            self._record_failure(w)
+            return 503, {"error": "worker_unreachable", "retryable": True,
+                         "worker": w.name,
+                         "message": f"{type(e).__name__}: {e}"}, {}
+        finally:
+            w.outstanding -= 1
+            self._outstanding -= 1
+
+    async def infer(self, payload: dict):
+        self.counters["dispatched"] += 1
+        w = self._pick()
+        if w is None:
+            self.counters["no_worker"] += 1
+            return 503, {"error": "no_healthy_worker", "retryable": True,
+                         "message": "every worker ejected or dead"}, {}
+        status, body, headers = await self._forward(w, payload)
+        if (status != 200 and wire.is_retryable(status, body)
+                and not self.draining):
+            w2 = self._pick(exclude=(w,))
+            if w2 is not None:
+                # ONE bounded retry, jittered so synchronized failures
+                # don't re-converge on the same instant
+                self.counters["retries"] += 1
+                await asyncio.sleep(
+                    self.retry_backoff_s * (0.5 + self._rng.random()))
+                status, body, headers = await self._forward(w2, payload)
+                if isinstance(body, dict):
+                    body = dict(body)
+                    body["retried"] = True
+        return status, body, headers
+
+    # -- health: probe loop, ejection, reinstatement, crash-resume ---------
+
+    def _record_failure(self, w) -> None:
+        w.oks = 0
+        w.fails += 1
+        if w.fails >= self.eject_after and w.state == "healthy":
+            w.state = "ejected"
+            self.counters["ejections"] += 1
+
+    def _record_pass(self, w) -> None:
+        w.fails = 0
+        if w.state == "ejected":
+            w.oks += 1
+            if w.oks >= self.reinstate_after:
+                w.state = "healthy"
+                w.oks = 0
+                self.counters["reinstatements"] += 1
+
+    async def _probe_one(self, w) -> None:
+        if not w.alive():
+            self._record_failure(w)
+            if w.state == "healthy":        # eject a corpse immediately
+                w.state = "ejected"
+                self.counters["ejections"] += 1
+            if self.auto_restart and not w.restarting and not self.draining:
+                w.restarting = True
+                try:
+                    await w.restart()
+                    self.counters["restarts"] += 1
+                except Exception:
+                    pass                    # next probe tick tries again
+                finally:
+                    w.restarting = False
+            return
+        try:
+            status, body, _h = await asyncio.wait_for(
+                w.healthz(), self.probe_timeout_s)
+            ok = status == 200 and bool((body or {}).get("ok", False))
+        except Exception:
+            ok = False
+        self.counters["probes"] += 1
+        if ok:
+            self._record_pass(w)
+        else:
+            self._record_failure(w)
+
+    async def _probe_loop(self) -> None:
+        while not self.draining:
+            await asyncio.gather(*(self._probe_one(w)
+                                   for w in self.workers))
+            await asyncio.sleep(self.probe_interval_s)
+
+    # -- observability -----------------------------------------------------
+
+    def snapshot(self) -> dict:
+        return {"counters": dict(self.counters),
+                "draining": self.draining,
+                "outstanding": self._outstanding,
+                "workers": {w.name: {"state": w.state,
+                                     "alive": w.alive(),
+                                     "outstanding": w.outstanding,
+                                     "fails": w.fails, "oks": w.oks,
+                                     "restarts": w.restarts}
+                            for w in self.workers}}
+
+    async def health(self):
+        snap = self.snapshot()
+        ok = not self.draining and bool(self._healthy())
+        snap["ok"] = ok
+        return (200 if ok else 503), snap, {}
+
+    async def metrics(self):
+        return 200, self.snapshot(), {}
+
+    # -- drain -------------------------------------------------------------
+
+    async def drain(self, budget_s: float | None = None):
+        """Fence, settle, drain every worker in parallel, never hang."""
+        budget = budget_s if budget_s is not None else self.drain_budget_s
+        t0 = time.monotonic()
+        self.draining = True                 # fence: admit() rejects now
+        await self.aclose()                  # stop probing/respawning
+        # settle the router's own in-flight forwards (they answer their
+        # clients through the workers' own drains below)
+        while self._outstanding > 0 and time.monotonic() - t0 < budget:
+            await asyncio.sleep(0.005)
+        remaining = max(0.5, budget - (time.monotonic() - t0))
+
+        async def _drain_one(w):
+            try:
+                await asyncio.wait_for(w.drain(remaining), remaining + 1.0)
+            except Exception:
+                try:
+                    w.terminate()           # budget's edge: hard stop
+                except Exception:
+                    pass
+
+        await asyncio.gather(*(_drain_one(w) for w in self.workers))
+        return 200, {"drained": True,
+                     "elapsed_s": time.monotonic() - t0,
+                     "outstanding": self._outstanding,
+                     "counters": dict(self.counters)}, {}

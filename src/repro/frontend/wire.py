@@ -1,0 +1,204 @@
+"""Wire protocol for the process-level serving front door.
+
+JSON over HTTP/1.1, stdlib only.  One request = one inference:
+
+    POST /v1/infer
+    {"network": "mbv2", "shape": [96, 96, 3], "dtype": "float32",
+     "data": "<base64 little-endian bytes>",
+     "priority": 1, "deadline_ms": 50.0}
+
+    200 {"network": "mbv2", "result": {"shape": ..., "dtype": ...,
+                                       "data": ...}}
+    4xx/5xx {"error": "<stable code>", "retryable": bool,
+             "message": "..."}
+
+The error body's ``error``/``retryable`` fields come straight from the
+typed serving errors (``repro.serving.errors``): ``overloaded`` -> 429 +
+``Retry-After``, ``deadline_exceeded`` -> 504, ``server_closed`` /
+``shutdown`` -> 503.  A router decides whether to re-issue a request from
+``retryable`` alone — no isinstance ladder crosses the process boundary.
+
+The HTTP layer here is deliberately minimal (request line + headers +
+Content-Length body; every response carries ``Connection: close``) and is
+split so the front door can ADMIT OR SHED AFTER THE HEADERS, BEFORE the
+body: ``read_head`` then ``read_body`` — a saturated door never pays
+body deserialization for a request it is about to reject.
+"""
+from __future__ import annotations
+
+import asyncio
+import base64
+import json
+
+import numpy as np
+
+from repro.serving.errors import ServingError
+
+MAX_BODY_BYTES = 64 << 20          # refuse absurd bodies before reading
+REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
+           405: "Method Not Allowed", 413: "Payload Too Large",
+           429: "Too Many Requests", 500: "Internal Server Error",
+           503: "Service Unavailable", 504: "Gateway Timeout"}
+
+
+# -- array <-> JSON ----------------------------------------------------------
+
+def encode_array(a) -> dict:
+    a = np.ascontiguousarray(np.asarray(a))
+    return {"shape": list(a.shape), "dtype": str(a.dtype),
+            "data": base64.b64encode(a.tobytes()).decode("ascii")}
+
+
+def decode_array(d: dict) -> np.ndarray:
+    raw = base64.b64decode(d["data"])
+    a = np.frombuffer(raw, dtype=np.dtype(d["dtype"]))
+    return a.reshape([int(v) for v in d["shape"]]).copy()
+
+
+def infer_payload(network: str, x, *, priority: int | None = None,
+                  deadline_ms: float | None = None) -> dict:
+    """Client-side body for ``POST /v1/infer``."""
+    out = {"network": network, **encode_array(x)}
+    if priority is not None:
+        out["priority"] = int(priority)
+    if deadline_ms is not None:
+        out["deadline_ms"] = float(deadline_ms)
+    return out
+
+
+# -- typed error <-> wire ----------------------------------------------------
+
+def error_reply(exc: BaseException, *, retry_after_s: float = 0.05):
+    """(status, body, headers) for any failure.  Typed serving errors map
+    through their stable ``code``/``retryable``/``wire_status``; anything
+    else is an opaque 500 marked retryable (the process may be sick, a
+    different worker can serve) — tracebacks never cross the wire."""
+    if isinstance(exc, ServingError):
+        status = exc.wire_status
+        body = {"error": exc.code, "retryable": bool(exc.retryable),
+                "message": str(exc)}
+        lane = getattr(exc, "lane_label", None)
+        if lane is not None:
+            body["lane"] = lane
+    elif isinstance(exc, (KeyError, ValueError)):
+        # unregistered network / malformed image: the request is wrong,
+        # not the worker — never retried
+        status = 400
+        body = {"error": "bad_request", "retryable": False,
+                "message": str(exc)}
+    else:
+        status = 500
+        body = {"error": "internal", "retryable": True,
+                "message": type(exc).__name__}
+    headers = {}
+    if status == 429:
+        headers["Retry-After"] = f"{retry_after_s:.3f}"
+    return status, body, headers
+
+
+def shed_reply(reason: str, *, retry_after_s: float = 0.05):
+    """A 429 minted at an admission gate ABOVE ``submit`` (token bucket,
+    pending bound) — same shape as a server-side ``Overloaded``."""
+    return 429, {"error": "overloaded", "retryable": True,
+                 "message": reason, "gate": reason}, \
+        {"Retry-After": f"{retry_after_s:.3f}"}
+
+
+def is_retryable(status: int, body: dict | None) -> bool:
+    """Router-side retry decision from a wire response alone."""
+    if isinstance(body, dict) and "retryable" in body:
+        return bool(body["retryable"])
+    return status in (429, 503)
+
+
+# -- minimal HTTP/1.1 --------------------------------------------------------
+
+async def read_head(reader: asyncio.StreamReader):
+    """(method, path, headers) — or None on EOF/garbage.  Stops at the
+    blank line so the caller can shed before touching the body."""
+    line = await reader.readline()
+    if not line:
+        return None
+    try:
+        method, path, _version = line.decode("latin-1").split(None, 2)
+    except ValueError:
+        return None
+    headers: dict[str, str] = {}
+    while True:
+        h = await reader.readline()
+        if h in (b"\r\n", b"\n", b""):
+            break
+        if b":" in h:
+            k, v = h.decode("latin-1").split(":", 1)
+            headers[k.strip().lower()] = v.strip()
+    return method.upper(), path, headers
+
+
+async def read_body(reader: asyncio.StreamReader, headers: dict) -> bytes:
+    n = int(headers.get("content-length", 0) or 0)
+    if n <= 0:
+        return b""
+    return await reader.readexactly(n)
+
+
+def response_bytes(status: int, body, headers: dict | None = None) -> bytes:
+    """Serialize one response; dict bodies go out as JSON."""
+    if isinstance(body, (dict, list)):
+        payload = json.dumps(body).encode()
+        ctype = "application/json"
+    else:
+        payload = bytes(body or b"")
+        ctype = "text/plain"
+    lines = [f"HTTP/1.1 {status} {REASONS.get(status, 'Unknown')}",
+             f"Content-Type: {ctype}",
+             f"Content-Length: {len(payload)}",
+             "Connection: close"]
+    for k, v in (headers or {}).items():
+        lines.append(f"{k}: {v}")
+    return ("\r\n".join(lines) + "\r\n\r\n").encode() + payload
+
+
+async def http_json(host: str, port: int, method: str, path: str,
+                    body: dict | None = None, timeout: float = 30.0):
+    """Tiny asyncio HTTP client: (status, headers, parsed-JSON body).
+    Raises ``ConnectionError``/``OSError`` on transport failure and
+    ``asyncio.TimeoutError`` past ``timeout`` — the router's retry and
+    ejection signals."""
+
+    async def _go():
+        reader, writer = await asyncio.open_connection(host, port)
+        try:
+            payload = b"" if body is None else json.dumps(body).encode()
+            head = (f"{method} {path} HTTP/1.1\r\n"
+                    f"Host: {host}:{port}\r\n"
+                    f"Content-Type: application/json\r\n"
+                    f"Content-Length: {len(payload)}\r\n"
+                    f"Connection: close\r\n\r\n")
+            writer.write(head.encode() + payload)
+            await writer.drain()
+            status_line = await reader.readline()
+            if not status_line:
+                raise ConnectionError("empty response")
+            status = int(status_line.split()[1])
+            headers: dict[str, str] = {}
+            while True:
+                h = await reader.readline()
+                if h in (b"\r\n", b"\n", b""):
+                    break
+                if b":" in h:
+                    k, v = h.decode("latin-1").split(":", 1)
+                    headers[k.strip().lower()] = v.strip()
+            raw = await read_body(reader, headers)
+            if not raw and headers.get("connection", "close") == "close" \
+                    and "content-length" not in headers:
+                raw = await reader.read()
+            out = json.loads(raw) if raw else None
+            return status, headers, out
+        finally:
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except Exception:
+                pass
+
+    return await asyncio.wait_for(_go(), timeout)

@@ -17,6 +17,19 @@ already go through:
                          calibration).
   * ``op="refresh"``   — a server-side stale-engine recompile.
 
+Process-level trigger points (``repro.frontend``) sit ABOVE the engines,
+at the serving process boundary, so router/front-door failure handling is
+just as CI-testable as the in-process paths:
+
+  * ``op="http"``      — the front door's request handler, after decode
+                         and before ``submit`` (a fired rule surfaces as
+                         a typed 500 wire response, never a hung socket).
+  * ``op="worker"``    — the router's per-worker forward; the site
+                         reports the target worker's name as ``device``,
+                         so "fail every dispatch to worker w1" is
+                         expressible exactly (a fired rule looks like a
+                         transport failure: the retry/ejection path runs).
+
 Faults are **deterministic**: a rule fires on an explicit trigger window
 (``after`` skips the first N matching events, ``times`` bounds how many
 fire) or on a seeded Bernoulli draw (``p``), never on wall-clock state.

@@ -162,6 +162,12 @@ class DynamicBatcher:
         with self._cond:
             return sum(len(q) for q in self._queues.values())
 
+    def depths(self) -> dict[LaneKey, int]:
+        """Point-in-time queue depth per non-empty lane (the /healthz
+        gauge source — one pass under the batcher's own lock)."""
+        with self._cond:
+            return {lane: len(q) for lane, q in self._queues.items() if q}
+
     def _lane_wait(self, lane: LaneKey) -> float:
         """The lane's soft deadline: priority <= 0 lanes flush after a
         fraction of the bulk max-wait — preemption at flush time."""

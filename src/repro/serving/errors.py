@@ -4,6 +4,18 @@ The request-level contract is that **every future issued by ``submit``
 resolves exactly once** — with a logits row or with one of these typed
 errors — and that admission failures raise synchronously (backpressure
 the caller can act on immediately).
+
+Every class carries three stable class attributes so transports above the
+in-process server (``repro.frontend``) can map failures without
+``isinstance`` ladders:
+
+  * ``code`` — a stable machine-readable identifier, serialized on the
+    wire and kept backward compatible;
+  * ``retryable`` — True when the request was definitely NOT served
+    (shed, closed, or swept before dispatch), so a router may safely
+    re-issue it elsewhere without risking a second answer;
+  * ``wire_status`` — the HTTP status the front door responds with
+    (429 reject-with-backpressure, 503 unavailable, 504 too late).
 """
 from __future__ import annotations
 
@@ -11,26 +23,52 @@ from __future__ import annotations
 class ServingError(RuntimeError):
     """Base class for all typed serving failures."""
 
+    code = "serving_error"
+    retryable = False
+    wire_status = 500
+
 
 class ServerClosed(ServingError):
     """``submit`` on a server that is not running: not yet started, or
-    already shut down.  Raised synchronously — no future is issued."""
+    already shut down.  Raised synchronously — no future is issued, so a
+    router may retry the request on another worker."""
+
+    code = "server_closed"
+    retryable = True
+    wire_status = 503
 
 
 class Overloaded(ServingError):
-    """Load shed: the request's lane is at its queue-depth bound.  Raised
-    synchronously at ``submit`` (reject-with-backpressure) instead of
-    buffering without bound.  ``lane`` and ``bound`` identify the queue."""
+    """Load shed: the request's lane is at its queue-depth bound, or an
+    admission gate above the server (token bucket, pending bound) refused
+    it.  Raised synchronously at ``submit`` (reject-with-backpressure)
+    instead of buffering without bound.  ``lane`` and ``bound`` identify
+    the queue; ``lane_label`` is the human-readable shedding lane (e.g.
+    ``"mbv2@96x96/p1"``), carried so metrics and wire responses can name
+    the saturated lane without re-deriving it."""
 
-    def __init__(self, msg: str, *, lane=None, bound: int | None = None):
+    code = "overloaded"
+    retryable = True
+    wire_status = 429
+
+    def __init__(self, msg: str, *, lane=None, bound: int | None = None,
+                 label: str | None = None):
         super().__init__(msg)
         self.lane = lane
         self.bound = bound
+        self.lane_label = label if label is not None else (
+            str(lane) if lane is not None else None)
 
 
 class DeadlineExceeded(ServingError):
     """The request's per-request deadline passed before its batch was
-    dispatched — late work is rejected, not served."""
+    dispatched — late work is rejected, not served.  NOT retryable: the
+    deadline has passed everywhere, and re-issuing could double-serve a
+    row whose first attempt is still racing the sweep."""
+
+    code = "deadline_exceeded"
+    retryable = False
+    wire_status = 504
 
     def __init__(self, msg: str, *, waited_s: float = 0.0,
                  deadline_s: float = 0.0):
@@ -41,4 +79,9 @@ class DeadlineExceeded(ServingError):
 
 class Shutdown(ServingError):
     """The server shut down before this request could be served.  Every
-    still-pending future resolves with this — a drain never hangs."""
+    still-pending future resolves with this — a drain never hangs.  The
+    row was swept, not served, so another worker may retry it."""
+
+    code = "shutdown"
+    retryable = True
+    wire_status = 503

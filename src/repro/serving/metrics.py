@@ -9,6 +9,7 @@ numbers.  ``snapshot`` is safe to call from any thread.
 from __future__ import annotations
 
 import threading
+import time
 from collections import deque
 
 
@@ -32,6 +33,14 @@ class ServerMetrics:
 
     def __init__(self, reservoir: int = 8192, lane_reservoir: int = 2048):
         self._lock = threading.Lock()
+        self._t_start = time.monotonic()         # uptime_s in snapshot
+        # live-state gauge provider: a callable returning a dict of point-
+        # in-time gauges (queue depths, in-flight, pending futures, server
+        # state).  The owning server registers it; ``snapshot`` calls it
+        # OUTSIDE this metrics lock — the provider reads structures that
+        # carry their own locks, so /healthz and /metrics serve counters
+        # AND gauges from one snapshot without any new locking here.
+        self._gauges = None
         self._lat = deque(maxlen=reservoir)      # seconds, per request
         self._lane_reservoir = lane_reservoir
         self._lanes: dict[str, dict] = {}        # label -> {lat, completed}
@@ -126,6 +135,10 @@ class ServerMetrics:
         with self._lock:
             self.fitted_scales[network] = dict(scales)
 
+    def set_gauge_provider(self, fn) -> None:
+        """Register the live-state gauge callable (see ``__init__``)."""
+        self._gauges = fn
+
     def snapshot(self) -> dict:
         with self._lock:
             lat = list(self._lat)
@@ -169,7 +182,17 @@ class ServerMetrics:
                            for k, v in self.fitted_scales.items()},
                 "throughput_rps": (self.completed / span if span > 0
                                    else float("nan")),
+                "uptime_s": time.monotonic() - self._t_start,
             }
+        # gauges are read outside the lock: the provider's structures
+        # (batcher, pending registry) carry their own synchronization
+        gauges = {}
+        if self._gauges is not None:
+            try:
+                gauges = dict(self._gauges() or {})
+            except Exception:       # a mid-shutdown provider never breaks
+                gauges = {}         # a health probe
+        out["gauges"] = gauges
         out["p50_ms"] = percentile(lat, 50) * 1e3 if lat else float("nan")
         out["p99_ms"] = percentile(lat, 99) * 1e3 if lat else float("nan")
         out["lanes"] = {

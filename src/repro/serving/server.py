@@ -472,6 +472,27 @@ class HeteroServer:
         self._pending: set = set()
         self._pending_lock = threading.Lock()
         self._state = "new"                 # -> "running" -> "closed"
+        # live-state gauges for /healthz and /metrics: served through
+        # ``metrics.snapshot()`` so transports read counters AND gauges
+        # from one call (the provider reads under the batcher's and the
+        # pending registry's own locks — no new locking)
+        self.metrics.set_gauge_provider(self._gauge_snapshot)
+
+    def _gauge_snapshot(self) -> dict:
+        with self._pending_lock:
+            pending = len(self._pending)
+        depths = self._batcher.depths()
+        return {"state": self._state,
+                "pending_requests": pending,
+                "inflight_batches": self._inflight(),
+                "queue_total": sum(depths.values()),
+                "queue_depth": {lane_label(lane): d
+                                for lane, d in depths.items()}}
+
+    @property
+    def state(self) -> str:
+        """Lifecycle state: ``new`` -> ``running`` -> ``closed``."""
+        return self._state
 
     # -- registration ------------------------------------------------------
 
@@ -714,7 +735,8 @@ class HeteroServer:
             self.metrics.count("shed")
             raise Overloaded(f"lane {lane_label(req.lane)} at queue-depth "
                              f"bound {self.max_queue}",
-                             lane=req.lane, bound=self.max_queue)
+                             lane=req.lane, bound=self.max_queue,
+                             label=lane_label(req.lane))
         self.metrics.record_submit(now=now)
         return req.future
 

@@ -1,0 +1,294 @@
+"""Process-level serving front door: wire-protocol units (unmarked, run
+in tier-1) and e2e HTTP tests (``frontend`` marker) — served rows
+bit-match the batch-1 oracle THROUGH the socket, typed rejections arrive
+as stable wire codes (429 + Retry-After / 504 / 503) instead of
+tracebacks, a killed worker process fails over without changing answers,
+and SIGTERM drains a worker to exit 0 with nothing left hanging.
+
+The heavy tests all serve one tiny fire module (seconds to compile,
+cached across tests); worker processes are spawned from the same spec,
+so their params — and therefore their rows — are bit-identical by
+construction (``init_network`` under the spec's seed).
+"""
+import json
+import signal
+import time
+import urllib.error
+import urllib.request
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.executor import compile_network
+from repro.core.graph import fire
+from repro.core.hetero import init_network
+from repro.core.partitioner import partition_network
+from repro.frontend import (FrontDoor, LocalBackend, ProcWorker, Router,
+                            ServerThread, TokenBucket, build_server, wire)
+from repro.runtime.faults import FaultPlan, FaultRule, inject
+from repro.serving.errors import (DeadlineExceeded, Overloaded, ServerClosed,
+                                  ServingError, Shutdown)
+
+HW = (8, 8)
+C = 16
+SPEC = {"networks": [{"kind": "fire", "name": "tiny", "hw": list(HW),
+                      "c_in": C, "squeeze": 4, "expand": 8, "seed": 0}],
+        "server": {"max_wait_ms": 1.0}}
+
+
+def _images(n, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), n)
+    return [np.asarray(0.5 * jax.random.normal(k, (*HW, C)),
+                       dtype=np.float32) for k in ks]
+
+
+def _post(port, path, body=None, timeout=60):
+    """(status, parsed-json, headers) via a blocking client — the door
+    runs on its own loop thread, so plain urllib is the honest client."""
+    data = b"" if body is None else json.dumps(body).encode()
+    req = urllib.request.Request(
+        f"http://127.0.0.1:{port}{path}", data=data, method="POST",
+        headers={"Content-Type": "application/json"})
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as r:
+            return r.status, json.load(r), dict(r.headers)
+    except urllib.error.HTTPError as e:
+        return e.code, json.load(e), dict(e.headers)
+
+
+def _get(port, path, timeout=30):
+    try:
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{port}{path}", timeout=timeout) as r:
+            return r.status, json.load(r)
+    except urllib.error.HTTPError as e:
+        return e.code, json.load(e)
+
+
+# --- wire-protocol units (tier-1: no server, no HTTP) ----------------------
+
+def test_array_roundtrip_is_bit_exact():
+    for dtype in ("float32", "int32", "uint8"):
+        x = (np.arange(2 * 3 * 4) % 7).reshape(2, 3, 4).astype(dtype)
+        y = wire.decode_array(wire.encode_array(x))
+        assert y.dtype == x.dtype and np.array_equal(x, y)
+
+
+def test_error_codes_are_a_stable_contract():
+    """The wire fields routers key on: frozen, not derived."""
+    assert (Overloaded.code, Overloaded.retryable,
+            Overloaded.wire_status) == ("overloaded", True, 429)
+    assert (DeadlineExceeded.code, DeadlineExceeded.retryable,
+            DeadlineExceeded.wire_status) == ("deadline_exceeded", False, 504)
+    assert (ServerClosed.code, ServerClosed.retryable,
+            ServerClosed.wire_status) == ("server_closed", True, 503)
+    assert (Shutdown.code, Shutdown.retryable,
+            Shutdown.wire_status) == ("shutdown", True, 503)
+    assert issubclass(Overloaded, ServingError) and not ServingError.retryable
+
+
+def test_error_reply_maps_typed_errors():
+    status, body, headers = wire.error_reply(
+        Overloaded("lane full", label="tiny@8x8/p1"))
+    assert status == 429 and body["retryable"] and "Retry-After" in headers
+    assert body["lane"] == "tiny@8x8/p1"
+    status, body, _h = wire.error_reply(DeadlineExceeded("late"))
+    assert status == 504 and not body["retryable"]
+    for exc in (Shutdown("bye"), ServerClosed("closed")):
+        status, body, _h = wire.error_reply(exc)
+        assert status == 503 and body["retryable"]
+    status, body, _h = wire.error_reply(KeyError("nope"))
+    assert status == 400 and not body["retryable"]
+    # opaque failures: class name only, never a traceback/message dump
+    status, body, _h = wire.error_reply(RuntimeError("secret internals"))
+    assert status == 500 and body["retryable"]
+    assert "secret" not in json.dumps(body)
+
+
+def test_is_retryable_prefers_body_over_status():
+    assert wire.is_retryable(429, {"retryable": True})
+    assert not wire.is_retryable(429, {"retryable": False})
+    assert wire.is_retryable(503, None) and not wire.is_retryable(504, None)
+
+
+def test_token_bucket_burst_and_refill():
+    tb = TokenBucket(rate=50.0, burst=2)
+    assert tb.admit() and tb.admit() and not tb.admit()
+    assert tb.retry_after_s() > 0
+    time.sleep(0.05)                       # 50/s: ~2.5 tokens back
+    assert tb.admit()
+    assert TokenBucket(rate=None).admit()  # disabled gate never sheds
+
+
+# --- e2e over HTTP ----------------------------------------------------------
+
+def _door(**door_kw):
+    server = build_server(SPEC)
+    handle = ServerThread(FrontDoor(LocalBackend(server, **door_kw)))
+    return server, handle.start()
+
+
+@pytest.fixture(scope="module")
+def oracle():
+    mods = [fire("tiny", HW[0], C, 4, 8)]
+    plans = partition_network(mods, paper_faithful=True)
+    eng = compile_network(mods, plans)
+    prepared = eng.prepare(init_network(mods, jax.random.PRNGKey(0)))
+    return lambda x: np.asarray(eng(prepared, x[None])[0])
+
+
+@pytest.mark.frontend
+def test_http_rows_bitmatch_batch1_oracle(oracle):
+    _server, h = _door()
+    try:
+        imgs = _images(6)
+        outs = [_post(h.port, "/v1/infer", wire.infer_payload("tiny", x))
+                for x in imgs]
+        for x, (status, body, _hdr) in zip(imgs, outs):
+            assert status == 200, body
+            assert np.array_equal(wire.decode_array(body["result"]),
+                                  oracle(x)), \
+                "row served over HTTP differs from batch-1 oracle"
+        status, hz = _get(h.port, "/healthz")
+        assert status == 200 and hz["ok"] and hz["uptime_s"] > 0
+        assert hz["completed"] >= 6
+    finally:
+        h.stop()
+
+
+@pytest.mark.frontend
+def test_deadline_and_bad_request_wire_codes():
+    _server, h = _door()
+    try:
+        # deadline_ms=0: already expired when its batch flushes -> 504,
+        # marked NOT retryable (the row may still have been computed)
+        status, body, _hdr = _post(
+            h.port, "/v1/infer",
+            wire.infer_payload("tiny", _images(1)[0], deadline_ms=0.0))
+        assert status == 504 and body["error"] == "deadline_exceeded"
+        assert body["retryable"] is False
+        # unregistered network / malformed body: 400, never retried
+        status, body, _hdr = _post(
+            h.port, "/v1/infer", wire.infer_payload("nope", _images(1)[0]))
+        assert status == 400 and body["retryable"] is False
+        status, body, _hdr = _post(h.port, "/v1/infer", {"network": "tiny"})
+        assert status == 400
+    finally:
+        h.stop()
+
+
+@pytest.mark.frontend
+def test_token_bucket_sheds_429_before_submit():
+    server, h = _door(rate=0.001, burst=1)
+    try:
+        first = _post(h.port, "/v1/infer",
+                      wire.infer_payload("tiny", _images(1)[0]))
+        assert first[0] == 200
+        status, body, headers = _post(
+            h.port, "/v1/infer", wire.infer_payload("tiny", _images(1)[0]))
+        assert status == 429 and body["error"] == "overloaded"
+        assert body["gate"] == "rate" and body["retryable"]
+        assert float(headers["Retry-After"]) > 0
+        # the shed request never reached the server
+        assert server.metrics.snapshot()["completed"] == 1
+    finally:
+        h.stop()
+
+
+@pytest.mark.frontend
+def test_http_fault_injection_is_typed_on_the_wire(oracle):
+    _server, h = _door()
+    try:
+        plan = FaultPlan([FaultRule(op="http", times=1)])
+        with inject(plan):
+            status, body, _hdr = _post(
+                h.port, "/v1/infer", wire.infer_payload("tiny", _images(1)[0]))
+        assert status == 500 and body["error"] == "internal"
+        assert body["retryable"] and plan.rules[0].fired == 1
+        assert "Traceback" not in json.dumps(body)
+        x = _images(2)[1]
+        status, body, _hdr = _post(h.port, "/v1/infer",
+                                   wire.infer_payload("tiny", x))
+        assert status == 200
+        assert np.array_equal(wire.decode_array(body["result"]), oracle(x))
+    finally:
+        h.stop()
+
+
+@pytest.mark.frontend
+def test_drain_fences_resolves_and_is_idempotent():
+    server, h = _door()
+    try:
+        assert _post(h.port, "/v1/infer",
+                     wire.infer_payload("tiny", _images(1)[0]))[0] == 200
+        status, body, _hdr = _post(h.port, "/drain")
+        assert status == 200 and body["drained"]
+        assert body["pending_requests"] == 0, \
+            "drain left admitted futures unresolved"
+        again = _post(h.port, "/drain")      # idempotent, still bounded
+        assert again[0] == 200 and again[1]["drained"]
+        status, body, _hdr = _post(h.port, "/v1/infer",
+                                   wire.infer_payload("tiny", _images(1)[0]))
+        assert status == 503 and body["error"] == "shutdown"
+        assert _get(h.port, "/healthz")[0] == 503
+        assert server.state == "closed"
+    finally:
+        h.stop(drain=False)
+
+
+# --- multi-process: failover, crash-resume, SIGTERM -------------------------
+
+@pytest.mark.frontend
+def test_router_survives_worker_kill_with_bitmatched_rows(oracle):
+    """Kill one of two worker processes mid-fleet: every request keeps
+    answering 200 with the SAME row (shared-spec determinism), the dead
+    worker is ejected, and /healthz stays ok."""
+    workers = [ProcWorker("w1", SPEC), ProcWorker("w2", SPEC)]
+    router = Router(workers, auto_restart=False, probe_interval_s=0.05,
+                    eject_after=1)
+    h = ServerThread(FrontDoor(router), also_start=(router,)).start()
+    try:
+        x = _images(1, seed=3)[0]
+        payload = wire.infer_payload("tiny", x)
+        ref = oracle(x)
+        assert np.array_equal(
+            wire.decode_array(_post(h.port, "/v1/infer", payload)[1]["result"]),
+            ref)
+        workers[0].terminate()               # hard kill, no goodbye
+        for _ in range(4):
+            status, body, _hdr = _post(h.port, "/v1/infer", payload)
+            assert status == 200, body
+            assert np.array_equal(wire.decode_array(body["result"]), ref), \
+                "failover changed the answer"
+        deadline = time.monotonic() + 5.0
+        while time.monotonic() < deadline:
+            snap = _get(h.port, "/metrics")[1]
+            if snap["workers"]["w1"]["state"] == "ejected":
+                break
+            time.sleep(0.05)
+        assert snap["workers"]["w1"]["state"] == "ejected"
+        assert snap["workers"]["w2"]["state"] == "healthy"
+        assert _get(h.port, "/healthz")[0] == 200
+    finally:
+        h.stop(drain=False)
+        for w in workers:
+            w.terminate()
+
+
+@pytest.mark.frontend
+def test_worker_sigterm_drains_to_clean_exit():
+    w = ProcWorker("w", SPEC)
+    import asyncio
+    asyncio.run(w.start())
+    try:
+        status, body, _hdr = _post(
+            w.port, "/v1/infer", wire.infer_payload("tiny", _images(1)[0]))
+        assert status == 200
+        w.proc.send_signal(signal.SIGTERM)
+        assert w.proc.wait(30.0) == 0, "SIGTERM drain did not exit clean"
+        with pytest.raises((ConnectionError, OSError)):
+            urllib.request.urlopen(
+                f"http://127.0.0.1:{w.port}/healthz", timeout=2)
+    finally:
+        w.terminate()

@@ -1,0 +1,148 @@
+"""Property: under ANY interleaving of requests, worker kills, worker
+restarts and a final drain, the router answers every request EXACTLY
+once — a 200 whose row bit-matches the batch-1 oracle, or a typed wire
+error — and never loses, duplicates, or double-answers one.
+
+Runs on in-process ``LocalWorker``s (same ``LocalBackend`` request
+semantics as a worker process, no spawn cost) so hypothesis can afford
+many interleavings; the subprocess transport itself is covered by the
+e2e tests in ``test_frontend.py``.
+"""
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis")
+
+import asyncio
+
+import jax
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.executor import compile_network
+from repro.core.graph import fire
+from repro.core.hetero import init_network
+from repro.core.partitioner import partition_network
+from repro.frontend import LocalWorker, Router, build_server, wire
+
+HW = (8, 8)
+C = 16
+SPEC = {"networks": [{"kind": "fire", "name": "tiny", "hw": list(HW),
+                      "c_in": C, "squeeze": 4, "expand": 8, "seed": 0}],
+        "server": {"max_wait_ms": 1.0}}
+TYPED = {"overloaded", "deadline_exceeded", "server_closed", "shutdown",
+         "worker_unreachable", "no_healthy_worker", "internal"}
+
+_ORACLE = {}
+
+
+def _oracle_row():
+    if "row" not in _ORACLE:
+        mods = [fire("tiny", HW[0], C, 4, 8)]
+        eng = compile_network(mods, partition_network(mods))
+        prep = eng.prepare(init_network(mods, jax.random.PRNGKey(0)))
+        x = np.asarray(0.5 * jax.random.normal(jax.random.PRNGKey(7),
+                                               (*HW, C)), dtype=np.float32)
+        _ORACLE["x"] = x
+        _ORACLE["row"] = np.asarray(eng(prep, x[None])[0])
+    return _ORACLE["x"], _ORACLE["row"]
+
+
+# op alphabet: issue a request / kill worker i / restart worker i;
+# drain always runs once at the end of the schedule
+_OPS = st.lists(
+    st.one_of(st.just(("req",)),
+              st.tuples(st.just("kill"), st.integers(0, 1)),
+              st.tuples(st.just("restart"), st.integers(0, 1))),
+    min_size=4, max_size=14)
+
+
+@settings(max_examples=10, deadline=None)
+@given(ops=_OPS)
+@pytest.mark.frontend
+def test_no_request_lost_duplicated_or_answered_twice(ops):
+    x, ref = _oracle_row()
+    payload = wire.infer_payload("tiny", x)
+
+    async def run():
+        workers = [LocalWorker(f"w{i}", lambda: build_server(SPEC))
+                   for i in range(2)]
+        router = Router(workers, auto_restart=False, eject_after=1,
+                        reinstate_after=1, probe_interval_s=0.01,
+                        retry_backoff_s=0.0, seed=17)
+        await router.start()
+        answers = []                       # exactly one entry per request
+
+        async def one_request():
+            status, body, _h = await router.infer(payload)
+            answers.append((status, body))
+
+        pending = []
+        for op in ops:
+            if op[0] == "req":
+                pending.append(asyncio.ensure_future(one_request()))
+            elif op[0] == "kill":
+                workers[op[1]].crash()
+            elif op[0] == "restart" and not workers[op[1]].alive():
+                await workers[op[1]].restart()
+            await asyncio.sleep(0)         # let the loop interleave
+        # requests issued against a live router must all settle ...
+        await asyncio.wait_for(asyncio.gather(*pending), 120)
+        # ... and drain must fence, settle, and never hang
+        status, body, _h = await asyncio.wait_for(router.drain(10.0), 30)
+        assert status == 200 and body["drained"]
+        assert router._outstanding == 0
+        status, body, _h = router.admit() or (None, None, None)
+        assert status == 503 and body["error"] == "shutdown", \
+            "post-drain admission was not fenced"
+        return len([op for op in ops if op[0] == "req"]), answers, router
+
+    n_requests, answers, router = asyncio.run(run())
+    # exactly one answer per request: none lost, none answered twice
+    assert len(answers) == n_requests
+    for status, body in answers:
+        if status == 200:
+            got = wire.decode_array(body["result"])
+            assert np.array_equal(got, ref), \
+                "a retried/failed-over request changed its answer"
+        else:
+            # failures cross the wire typed, never as tracebacks
+            assert isinstance(body, dict) and body["error"] in TYPED, body
+    # a retry is bounded to ONE re-issue per request
+    assert router.counters["retries"] <= n_requests
+
+
+@pytest.mark.frontend
+def test_ejection_and_probe_reinstatement_cycle():
+    """Deterministic breaker walk: kill -> ejected (probe failures),
+    restart -> reinstated (probe passes), requests flow to it again."""
+
+    async def run():
+        workers = [LocalWorker(f"w{i}", lambda: build_server(SPEC))
+                   for i in range(2)]
+        router = Router(workers, auto_restart=False, eject_after=2,
+                        reinstate_after=2, probe_interval_s=0.01,
+                        retry_backoff_s=0.0)
+        await router.start()
+        try:
+            workers[0].crash()
+            for _ in range(200):
+                if workers[0].state == "ejected":
+                    break
+                await asyncio.sleep(0.01)
+            assert workers[0].state == "ejected"
+            assert router.counters["ejections"] >= 1
+            assert router._pick() is workers[1]
+
+            await workers[0].restart()
+            for _ in range(200):
+                if workers[0].state == "healthy":
+                    break
+                await asyncio.sleep(0.01)
+            assert workers[0].state == "healthy"
+            assert router.counters["reinstatements"] >= 1
+        finally:
+            await router.drain(10.0)
+
+    asyncio.run(run())
