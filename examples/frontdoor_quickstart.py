@@ -7,11 +7,14 @@ robustness story end to end with a plain blocking HTTP client:
 
   1. serve requests and verify the rows coming back THROUGH the socket
      bit-match a batch-1 oracle engine call,
-  2. saturate a token bucket and read the typed 429 + Retry-After shed,
-  3. kill one worker mid-fleet and watch requests keep answering the
+  2. re-serve the same image over ONE keep-alive socket in the binary
+     ``application/x-tensor`` framing and verify both framings
+     bit-match (protocol v2: no reconnect, no base64),
+  3. saturate a token bucket and read the typed 429 + Retry-After shed,
+  4. kill one worker mid-fleet and watch requests keep answering the
      SAME bits (least-outstanding failover + one retry on the healthy
      worker, probe-based ejection),
-  4. gracefully drain: the fence turns new requests into typed 503s
+  5. gracefully drain: the fence turns new requests into typed 503s
      while everything already admitted still resolves.
 
     PYTHONPATH=src python examples/frontdoor_quickstart.py [--n 8]
@@ -22,6 +25,7 @@ See docs/serving-frontdoor.md for the wire protocol and the router's
 ejection/reinstatement cycle.
 """
 import argparse
+import http.client
 import json
 import time
 import urllib.error
@@ -33,11 +37,11 @@ from repro.frontend import FrontDoor, LocalWorker, Router, ServerThread, wire
 from repro.frontend.worker import build_server
 
 
-def post(port, path, body=None, timeout=60):
+def post(port, path, body=None, timeout=60, headers=None):
     data = b"" if body is None else json.dumps(body).encode()
     req = urllib.request.Request(
         f"http://127.0.0.1:{port}{path}", data=data, method="POST",
-        headers={"Content-Type": "application/json"})
+        headers={"Content-Type": "application/json", **(headers or {})})
     try:
         with urllib.request.urlopen(req, timeout=timeout) as r:
             return r.status, json.load(r), dict(r.headers)
@@ -85,7 +89,30 @@ def main():
         print(f"[1] served over HTTP, row bit-matches oracle "
               f"(shape {ref.shape})")
 
-        # 2. saturate the token bucket -> typed 429 + Retry-After
+        # 2. protocol v2: one keep-alive socket, binary framing both
+        # ways, on the deadline-critical class-0 lane (3x refill weight)
+        conn = http.client.HTTPConnection("127.0.0.1", h.port, timeout=60)
+        body_bin, hdr_bin = wire.infer_request(
+            name, x, priority=0, binary=True,
+            accept=wire.TENSOR_CONTENT_TYPE)
+        for i in range(3):
+            conn.request("POST", "/v1/infer", body=body_bin,
+                         headers=hdr_bin)
+            r = conn.getresponse()
+            raw = r.read()
+            assert r.status == 200, raw
+            assert r.getheader("Content-Type") == wire.TENSOR_CONTENT_TYPE
+            row = wire.decode_tensor(raw)
+            assert np.array_equal(row, ref), "binary framing != base64"
+            time.sleep(0.1)                  # stay inside the lane's rate
+        conn.close()
+        frame_b = len(body_bin)
+        json_b = len(json.dumps(payload).encode())
+        print(f"[2] 3 binary-framed requests on ONE socket bit-match "
+              f"the base64 path (frame {frame_b} B vs JSON {json_b} B, "
+              f"keepalive_reuses={door.keepalive_reuses})")
+
+        # 3. saturate the token bucket -> typed 429 + Retry-After
         sheds = 0
         for _ in range(20):
             status, body, headers = post(h.port, "/v1/infer", payload)
@@ -93,23 +120,28 @@ def main():
                 sheds += 1
                 retry_after = headers.get("Retry-After")
         assert sheds > 0, "burst never shed"
-        print(f"[2] burst of 20 shed {sheds} typed 429s "
+        print(f"[3] burst of 20 shed {sheds} typed 429s "
               f"(Retry-After: {retry_after}s) — admission is pre-body")
         time.sleep(0.2)                      # let the bucket refill
 
-        # 3. kill one worker mid-fleet: answers keep coming, same bits
+        # 4. kill one worker mid-fleet: answers keep coming, same bits
+        # (class-0 lane via the X-Priority header — admission is
+        # pre-body, so its 3x refill weight rides out the pressure the
+        # shed phase left on the default lane)
+        payload0 = wire.infer_payload(name, x, priority=0)
         workers[0].crash()
         served = 0
         for _ in range(args.n):
-            status, body, _ = post(h.port, "/v1/infer", payload)
+            status, body, _ = post(h.port, "/v1/infer", payload0,
+                                   headers={"X-Priority": "0"})
             if status == 200:
                 assert np.array_equal(wire.decode_array(body["result"]),
                                       ref), "failover changed the answer"
                 served += 1
-            time.sleep(0.05)
+            time.sleep(0.1)
         snap = h.call(router.metrics())[1]
         w = snap["workers"]
-        print(f"[3] killed w0 mid-fleet: {served}/{args.n} served "
+        print(f"[4] killed w0 mid-fleet: {served}/{args.n} served "
               f"bit-identically; w0={w['w0']['state']}, "
               f"w1={w['w1']['state']}, "
               f"retries={snap['counters']['retries']}, "
@@ -119,11 +151,11 @@ def main():
         # 4. graceful drain: fence + resolve, then typed 503
         status, body, _ = post(h.port, "/drain")
         assert status == 200 and body["drained"], body
-        print(f"[4] drained in {body['elapsed_s'] * 1e3:.0f} ms "
+        print(f"[5] drained in {body['elapsed_s'] * 1e3:.0f} ms "
               f"(outstanding={body['outstanding']})")
         status, body, _ = post(h.port, "/v1/infer", payload)
         assert status == 503 and body["error"] == "shutdown", body
-        print(f"[4] post-drain request -> typed {status} "
+        print(f"[5] post-drain request -> typed {status} "
               f"'{body['error']}' (retryable={body['retryable']})")
     print("done: the full robustness story ran over real sockets")
 

@@ -1,27 +1,35 @@
-"""Process-level serving front door (PR 9).
+"""Process-level serving front door (PR 9; data plane v2 since PR 10).
 
 ``repro.serving`` answers in-process ``submit()`` calls; this package
 puts a network boundary and a process supervisor in front of it:
 
-  * ``wire``   — JSON-over-HTTP/1.1 protocol; typed serving errors cross
-                 as stable ``code``/``retryable`` wire fields.
-  * ``app``    — ``FrontDoor`` (asyncio HTTP door), ``LocalBackend``
-                 (one in-process ``HeteroServer``), ``TokenBucket``
-                 admission, ``ServerThread`` harness.
-  * ``router`` — ``Router`` (least-outstanding dispatch, health-probe
-                 ejection/reinstatement, one-retry-elsewhere, fleet
-                 drain) over ``LocalWorker``/``ProcWorker`` fleets.
+  * ``wire``   — HTTP/1.1 protocol in two framings (JSON-base64 and
+                 binary ``application/x-tensor``, ``Accept``-negotiated,
+                 bit-match parity); typed serving errors cross as stable
+                 ``code``/``retryable`` wire fields; ``HttpPool``
+                 persistent keep-alive client connections.
+  * ``app``    — ``FrontDoor`` (asyncio keep-alive HTTP door with
+                 pipelined in-order responses), ``LocalBackend`` (one
+                 in-process ``HeteroServer``), ``TokenBucket``/
+                 ``WeightedTokenBuckets`` admission (per-priority-class
+                 weighted refill), ``ServerThread`` harness.
+  * ``router`` — ``Router`` (least-outstanding dispatch over pooled
+                 connections, health-probe ejection/reinstatement,
+                 one-retry-elsewhere, queue-depth worker auto-scaling,
+                 fleet drain) over ``LocalWorker``/``ProcWorker``
+                 fleets.
   * ``worker`` — the ``python -m repro.frontend.worker`` process
                  entrypoint (spec-driven registration, READY handshake,
                  SIGTERM graceful drain).
 """
 from repro.frontend.app import (DRAIN_BUDGET_S, FrontDoor, LocalBackend,
-                                ServerThread, TokenBucket)
+                                ServerThread, TokenBucket,
+                                WeightedTokenBuckets)
 from repro.frontend.router import LocalWorker, ProcWorker, Router
 
 __all__ = ["DRAIN_BUDGET_S", "FrontDoor", "LocalBackend", "ServerThread",
-           "TokenBucket", "LocalWorker", "ProcWorker", "Router",
-           "build_server", "make_door", "wire"]
+           "TokenBucket", "WeightedTokenBuckets", "LocalWorker",
+           "ProcWorker", "Router", "build_server", "make_door", "wire"]
 
 
 def __getattr__(name):

@@ -1,23 +1,46 @@
 """Asyncio HTTP front door over an in-process ``HeteroServer``.
 
 The last layer between the compiled heterogeneous engine and real
-multiplexed traffic: requests arrive as JSON over HTTP/1.1 (stdlib
-asyncio only — no new dependencies), are admission-checked BEFORE their
-body is read, decoded, submitted to the server's batching lanes with
-their ``deadline_ms``/``priority`` propagated, and answered from the
-request future.  The PR-6 typed errors cross the process boundary as
-stable wire codes instead of tracebacks (``repro.frontend.wire``):
-``Overloaded`` -> 429 + Retry-After, ``DeadlineExceeded`` -> 504,
-``ServerClosed``/``Shutdown`` -> 503.
+multiplexed traffic: requests arrive over HTTP/1.1 (stdlib asyncio only
+— no new dependencies), are admission-checked BEFORE their body is read,
+decoded, submitted to the server's batching lanes with their
+``deadline_ms``/``priority`` propagated, and answered from the request
+future.  The PR-6 typed errors cross the process boundary as stable wire
+codes instead of tracebacks (``repro.frontend.wire``): ``Overloaded`` ->
+429 + Retry-After, ``DeadlineExceeded`` -> 504, ``ServerClosed``/
+``Shutdown`` -> 503.
+
+**Protocol v2 (keep-alive).**  The door honors ``Connection:
+keep-alive`` (the HTTP/1.1 default): one socket carries many
+request/response rounds.  A reader task parses heads and bodies in
+order; each admitted request runs as its own task while the NEXT
+request is already being read, and a per-connection writer task sends
+the responses back in request order — so a slow inference never
+deadlocks the socket and a burst of pipelined requests overlaps with
+batching.  Two bounds keep a connection honest: ``idle_timeout_s``
+closes a socket with no request in flight and nothing arriving, and
+``conn_inflight`` caps unanswered requests per connection (the reader
+stops parsing until responses drain — backpressure, not a 429, because
+the client self-inflicted the queue).  Both framings of
+``repro.frontend.wire`` are served: JSON-base64 (default) and
+``application/x-tensor`` request bodies, with the response framing
+negotiated via ``Accept``.
 
 **Admission path** (cheapest check first, all before deserialization):
 
   1. drain fence / server state      -> 503 ``shutdown``/``server_closed``
-  2. token bucket (``rate``/``burst``) -> 429 ``overloaded`` (gate=rate)
+  2. weighted per-priority token buckets (``rate``/``burst``/
+     ``weights``)                    -> 429 ``overloaded`` (gate=rate)
   3. pending-futures bound (``max_pending``, read from the server's
      metrics gauges)                 -> 429 ``overloaded`` (gate=pending)
-  4. body size sanity                -> 413
+  4. body size sanity                -> 413 (connection closed)
   5. ``HeteroServer.submit`` itself  -> per-lane queue bound, typed 429
+
+The admission class is read pre-body from the ``X-Priority`` header
+(class 1 if absent): ``WeightedTokenBuckets`` splits the refill rate by
+per-class weights (default ``{0: 3, 1: 1}``), so when the door
+saturates, deadline-critical class-0 traffic sheds LAST instead of
+competing in one global bucket.
 
 **Endpoints.**  ``POST /v1/infer`` (inference), ``GET /healthz`` (cheap
 liveness: ok flag + the gauges, served from one
@@ -31,9 +54,11 @@ PR-6 contract), and the door answers each of them before the sockets
 close.  A drain never hangs: the shutdown call itself is bounded and the
 fence guarantees the in-flight set only shrinks.
 
-``faults.trip("http")`` fires in the handler between decode and submit,
-so front-door failures are injectable in CI exactly like device faults
-(``repro.runtime.faults``).
+``faults.trip("conn")`` fires per parsed request head (the
+connection-loop trigger point: the error is answered typed and the
+socket survives) and ``faults.trip("http")`` fires in the handler
+between decode and submit, so front-door failures are injectable in CI
+exactly like device faults (``repro.runtime.faults``).
 """
 from __future__ import annotations
 
@@ -47,6 +72,7 @@ from repro.runtime import faults
 from repro.serving.errors import DeadlineExceeded, ServerClosed, Shutdown
 
 DRAIN_BUDGET_S = 10.0
+DEFAULT_LANE_WEIGHTS = {0: 3.0, 1: 1.0}
 
 
 class TokenBucket:
@@ -60,22 +86,63 @@ class TokenBucket:
         self._tokens = float(self.burst)
         self._t = time.monotonic()
 
-    def admit(self) -> bool:
-        if self.rate is None:
-            return True
+    def _refill(self) -> None:
         now = time.monotonic()
         self._tokens = min(self.burst,
                            self._tokens + (now - self._t) * self.rate)
         self._t = now
+
+    def admit(self) -> bool:
+        if self.rate is None:
+            return True
+        self._refill()
         if self._tokens >= 1.0:
             self._tokens -= 1.0
             return True
         return False
 
     def retry_after_s(self) -> float:
+        """Seconds until one token exists — recomputed from
+        ``time.monotonic()`` NOW, not from the last ``admit()`` call's
+        time base, so a bucket probed without traffic reports the true
+        remaining wait instead of a stale (or zero) one."""
         if self.rate is None or self.rate <= 0:
             return 0.05
+        self._refill()
         return max(0.001, (1.0 - self._tokens) / self.rate)
+
+
+class WeightedTokenBuckets:
+    """Per-priority-class admission: one ``TokenBucket`` per class, the
+    total refill ``rate`` split by ``weights`` (class -> share).  Under
+    saturation each class degrades to its own weighted rate instead of
+    racing for one global bucket — the deadline-critical class-0 lane
+    (default weight 3) sheds LAST.  Unknown classes ride the
+    lowest-weight bucket; ``rate=None`` disables every gate."""
+
+    def __init__(self, rate: float | None, burst: int = 64,
+                 weights: dict | None = None):
+        self.rate = rate
+        ws = {int(k): float(v)
+              for k, v in (weights or DEFAULT_LANE_WEIGHTS).items()}
+        if not ws or any(v <= 0 for v in ws.values()):
+            raise ValueError(f"lane weights must be positive: {ws}")
+        total = sum(ws.values())
+        self.weights = ws
+        self.buckets = {
+            p: TokenBucket(None if rate is None else rate * w / total,
+                           max(1, round(burst * w / total)))
+            for p, w in ws.items()}
+        self._fallback = min(ws, key=ws.get)
+
+    def bucket_for(self, priority: int) -> TokenBucket:
+        return self.buckets.get(int(priority), self.buckets[self._fallback])
+
+    def admit(self, priority: int = 1) -> bool:
+        return self.bucket_for(priority).admit()
+
+    def retry_after_s(self, priority: int = 1) -> float:
+        return self.bucket_for(priority).retry_after_s()
 
 
 class LocalBackend:
@@ -88,34 +155,39 @@ class LocalBackend:
     """
 
     def __init__(self, server, *, rate: float | None = None,
-                 burst: int = 64, max_pending: int | None = None,
+                 burst: int = 64, weights: dict | None = None,
+                 max_pending: int | None = None,
                  request_timeout_s: float = 60.0,
                  drain_budget_s: float = DRAIN_BUDGET_S):
         self.server = server
-        self.bucket = TokenBucket(rate, burst)
+        self.buckets = WeightedTokenBuckets(rate, burst, weights)
         self.max_pending = max_pending
         self.request_timeout_s = request_timeout_s
         self.drain_budget_s = drain_budget_s
         self.draining = False
         self.sheds = 0                     # admission-gate rejections
+        self.sheds_by_class: dict[int, int] = {}
         self._drain_result: dict | None = None
 
     # -- admission (pre-body: nothing here touches the payload) ------------
 
-    def admit(self):
+    def admit(self, priority: int = 1):
         """None to admit, else a (status, body, headers) shed reply.
         Called after the request HEAD is parsed and before the body is
         read — an overloaded door never pays deserialization for a
-        request it rejects."""
+        request it rejects.  ``priority`` is the admission class from
+        the ``X-Priority`` header (weighted buckets)."""
         if self.draining:
             return wire.error_reply(Shutdown("draining: admission fenced"))
         if self.server.state != "running":
             return wire.error_reply(ServerClosed(
                 f"server is {self.server.state}, not running"))
-        if not self.bucket.admit():
+        if not self.buckets.admit(priority):
             self.sheds += 1
-            return wire.shed_reply("rate",
-                                   retry_after_s=self.bucket.retry_after_s())
+            key = int(priority)
+            self.sheds_by_class[key] = self.sheds_by_class.get(key, 0) + 1
+            return wire.shed_reply(
+                "rate", retry_after_s=self.buckets.retry_after_s(priority))
         if self.max_pending is not None:
             gauges = self.server.metrics.snapshot()["gauges"]
             if gauges.get("pending_requests", 0) >= self.max_pending:
@@ -126,16 +198,30 @@ class LocalBackend:
     # -- request path ------------------------------------------------------
 
     async def infer(self, payload: dict):
-        """(status, body, headers) for one decoded /v1/infer payload."""
+        """(status, body, headers) for one /v1/infer payload.  The array
+        arrives as JSON-base64 fields, a raw binary frame under
+        ``_tensor``, or pre-decoded under ``_x``; a 200 body carries the
+        served row un-encoded under ``_row`` (the door encodes it at the
+        edge, in the client's negotiated framing)."""
         try:
             faults.trip("http")
-            x = wire.decode_array(payload)
+            if "_tensor" in payload:
+                x = wire.decode_tensor(payload["_tensor"])
+            elif "_x" in payload:
+                x = payload["_x"]
+            else:
+                x = wire.decode_array(payload)
             fut = self.server.submit(
                 payload["network"], x,
                 priority=int(payload.get("priority", 1)),
                 deadline_ms=payload.get("deadline_ms"))
         except Exception as e:
-            return wire.error_reply(e)
+            reply = wire.error_reply(e)
+            if reply[0] == 400:
+                # malformed wire bodies are a tracked failure class, not
+                # an anonymous error
+                self.server.metrics.count("bad_requests")
+            return reply
         try:
             row = await asyncio.wait_for(asyncio.wrap_future(fut),
                                          self.request_timeout_s)
@@ -147,8 +233,7 @@ class LocalBackend:
                 waited_s=self.request_timeout_s))
         except Exception as e:
             return wire.error_reply(e)
-        return 200, {"network": payload["network"],
-                     "result": wire.encode_array(row)}, {}
+        return 200, {"network": payload["network"], "_row": row}, {}
 
     async def health(self):
         snap = self.server.metrics.snapshot()
@@ -163,7 +248,9 @@ class LocalBackend:
                 "queue_total": gauges.get("queue_total", 0),
                 "queue_depth": gauges.get("queue_depth", {}),
                 "completed": snap.get("completed", 0),
-                "shed": snap.get("shed", 0) + self.sheds}
+                "bad_requests": snap.get("bad_requests", 0),
+                "shed": snap.get("shed", 0) + self.sheds,
+                "sheds_by_class": dict(self.sheds_by_class)}
         return (200 if ok else 503), body, {}
 
     async def metrics(self):
@@ -199,14 +286,24 @@ class FrontDoor:
     """The HTTP surface: routes requests on one asyncio server to any
     backend exposing ``admit``/``infer``/``health``/``metrics``/``drain``
     (``LocalBackend`` for a worker process, ``repro.frontend.router.
-    Router`` for the multi-worker door)."""
+    Router`` for the multi-worker door).
 
-    def __init__(self, backend, *, host: str = "127.0.0.1", port: int = 0):
+    Protocol v2: keep-alive sockets with pipelined in-order responses,
+    bounded by ``idle_timeout_s`` (close a quiet connection) and
+    ``conn_inflight`` (max unanswered requests per connection before the
+    reader stops parsing — per-socket backpressure)."""
+
+    def __init__(self, backend, *, host: str = "127.0.0.1", port: int = 0,
+                 idle_timeout_s: float = 30.0, conn_inflight: int = 8):
         self.backend = backend
         self.host = host
         self.port = port
+        self.idle_timeout_s = idle_timeout_s
+        self.conn_inflight = max(1, int(conn_inflight))
         self._srv: asyncio.AbstractServer | None = None
         self.requests = 0
+        self.connections = 0
+        self.keepalive_reuses = 0       # requests beyond a socket's first
 
     async def start(self) -> "FrontDoor":
         self._srv = await asyncio.start_server(self._handle, self.host,
@@ -231,16 +328,46 @@ class FrontDoor:
 
     async def _handle(self, reader: asyncio.StreamReader,
                       writer: asyncio.StreamWriter) -> None:
+        """One keep-alive connection: this reader loop parses request
+        heads and bodies IN ORDER, admission-checks between them, and
+        enqueues each request's (future, keepalive, accept) for the
+        writer task — which answers in the same order while the reader
+        is already parsing the next request."""
+        self.connections += 1
+        queue: asyncio.Queue = asyncio.Queue(maxsize=self.conn_inflight)
+        pending = [0]                   # enqueued, not yet answered
+        wtask = asyncio.ensure_future(self._writer_loop(writer, queue,
+                                                        pending))
+        first = True
         try:
-            head = await wire.read_head(reader)
-            if head is None:
-                return
-            method, path, headers = head
-            self.requests += 1
-            status, body, extra = await self._route(method, path, headers,
-                                                    reader)
-            writer.write(wire.response_bytes(status, body, extra))
-            await writer.drain()
+            while not wtask.done():
+                try:
+                    head = await asyncio.wait_for(wire.read_head(reader),
+                                                  self.idle_timeout_s)
+                except asyncio.TimeoutError:
+                    if pending[0] > 0:
+                        continue        # responses in flight: not idle
+                    break               # idle: close the socket
+                if head is None:
+                    break               # EOF or unparseable head
+                method, path, headers, version = head
+                self.requests += 1
+                if not first:
+                    self.keepalive_reuses += 1
+                first = False
+                keep = wire.wants_keepalive(version, headers)
+                item = await self._read_and_route(method, path, headers,
+                                                  reader)
+                if item is None:
+                    break               # transport died mid-body
+                result, force_close = item
+                keep = keep and not force_close
+                pending[0] += 1
+                await queue.put((result, keep, headers.get("accept")))
+                if not keep:
+                    break
+            await queue.put(None)
+            await wtask
         except (ConnectionError, asyncio.IncompleteReadError):
             pass                        # client went away: nothing to answer
         except Exception as e:          # defensive: no traceback on the wire
@@ -250,51 +377,146 @@ class FrontDoor:
             except Exception:
                 pass
         finally:
+            if not wtask.done():
+                wtask.cancel()
+                try:
+                    await wtask
+                except (asyncio.CancelledError, Exception):
+                    pass
             try:
                 writer.close()
                 await writer.wait_closed()
             except Exception:
                 pass
 
-    async def _route(self, method: str, path: str, headers: dict, reader):
-        path = path.split("?", 1)[0]
-        if path == "/healthz" and method == "GET":
-            return await self.backend.health()
-        if path == "/metrics" and method == "GET":
-            return await self.backend.metrics()
-        if path == "/drain" and method == "POST":
-            return await self.backend.drain()
-        if path != "/v1/infer":
-            return 404, {"error": "not_found", "retryable": False,
-                         "message": path}, {}
-        if method != "POST":
-            return 405, {"error": "method_not_allowed", "retryable": False,
-                         "message": method}, {}
-        # admission BEFORE the body: shed work, not just requests
-        shed = self.backend.admit()
-        if shed is not None:
-            await self._discard_body(reader, headers)
-            return shed
-        if int(headers.get("content-length", 0) or 0) > wire.MAX_BODY_BYTES:
-            return 413, {"error": "payload_too_large",
-                         "retryable": False, "message": ""}, {}
-        raw = await wire.read_body(reader, headers)
-        try:
-            payload = json.loads(raw)
-        except Exception as e:
-            return 400, {"error": "bad_request", "retryable": False,
-                         "message": f"invalid JSON: {e}"}, {}
-        return await self.backend.infer(payload)
+    async def _writer_loop(self, writer, queue, pending) -> None:
+        """Answer queued requests in order.  On a broken client socket,
+        keep CONSUMING (awaiting each result, dropping the bytes) so the
+        reader's bounded queue can never wedge a backend task."""
+        broken = False
+        while True:
+            item = await queue.get()
+            if item is None:
+                return
+            result, keep, accept = item
+            try:
+                if isinstance(result, tuple):
+                    status, body, extra = result
+                else:
+                    status, body, extra = await result
+            except Exception as e:
+                status, body, extra = wire.error_reply(e)
+            pending[0] -= 1
+            if broken:
+                continue
+            try:
+                writer.write(self._encode(status, body, extra, keep,
+                                          accept))
+                await writer.drain()
+            except Exception:
+                broken = True
+                continue
+            if not keep:
+                return
 
     @staticmethod
-    async def _discard_body(reader, headers) -> None:
-        """Drain a shed request's body so the client can read the reply
-        (a closed pipe mid-upload reads as a transport error, and a
-        transport error would be retried — a shed must stay typed)."""
+    def _encode(status, body, extra, keep, accept) -> bytes:
+        """Serialize one response, encoding a served row (``_row``) at
+        the edge in the client's negotiated framing."""
+        if isinstance(body, dict) and "_row" in body:
+            try:
+                out, ctype, xh = wire.encode_result(body, accept)
+            except Exception as e:
+                return wire.response_bytes(*wire.error_reply(e),
+                                           keepalive=keep)
+            return wire.response_bytes(status, out, {**(extra or {}), **xh},
+                                       keepalive=keep, content_type=ctype)
+        if isinstance(body, (bytes, bytearray)):
+            # router passthrough: an already-framed worker response
+            ct = (extra or {}).get("content-type")
+            return wire.response_bytes(status, body, extra, keepalive=keep,
+                                       content_type=ct)
+        return wire.response_bytes(status, body, extra, keepalive=keep)
+
+    async def _read_and_route(self, method: str, path: str, headers: dict,
+                              reader):
+        """(result, force_close) for one parsed request head — result is
+        a (status, body, headers) tuple answered immediately, or an
+        asyncio future for an in-flight inference.  None means the
+        transport died mid-body (close without answering)."""
+        path = path.split("?", 1)[0]
+        try:
+            faults.trip("conn")
+        except Exception as e:
+            if not await self._discard_body(reader, headers):
+                return None
+            return wire.error_reply(e), False
+        if path == "/healthz" and method == "GET":
+            return await self.backend.health(), False
+        if path == "/metrics" and method == "GET":
+            return await self.backend.metrics(), False
+        if path == "/drain" and method == "POST":
+            await self._discard_body(reader, headers)
+            return await self.backend.drain(), False
+        if path != "/v1/infer":
+            await self._discard_body(reader, headers)
+            return (404, {"error": "not_found", "retryable": False,
+                          "message": path}, {}), False
+        if method != "POST":
+            await self._discard_body(reader, headers)
+            return (405, {"error": "method_not_allowed", "retryable": False,
+                          "message": method}, {}), False
+        # admission BEFORE the body: shed work, not just requests.  The
+        # class rides in X-Priority so the weighted buckets can act here.
+        shed = self.backend.admit(wire.priority_from_headers(headers))
+        if shed is not None:
+            if not await self._discard_body(reader, headers):
+                return None
+            return shed, False
+        if int(headers.get("content-length", 0) or 0) > wire.MAX_BODY_BYTES:
+            # refusing to read the body leaves the socket mid-stream:
+            # answer 413 and force the connection closed
+            return (413, {"error": "payload_too_large",
+                          "retryable": False, "message": ""}, {}), True
+        try:
+            raw = await wire.read_body(reader, headers)
+        except (ConnectionError, asyncio.IncompleteReadError, OSError):
+            return None
+        ctype = headers.get("content-type", "")
+        if ctype.startswith(wire.TENSOR_CONTENT_TYPE):
+            try:
+                meta = wire.infer_meta_from_headers(headers)
+            except Exception as e:
+                return wire.error_reply(e), False
+            payload = {**meta, "_tensor": raw}
+        else:
+            try:
+                payload = json.loads(raw)
+            except Exception as e:
+                return (400, {"error": "bad_request", "retryable": False,
+                              "message": f"invalid JSON: {e}"}, {}), False
+            if not isinstance(payload, dict):
+                return (400, {"error": "bad_request", "retryable": False,
+                              "message": "request body must be a JSON "
+                                         "object"}, {}), False
+        if headers.get("accept"):
+            # ride along so a router hop can forward the negotiation and
+            # pass the worker's framed response through untranscoded
+            payload["_accept"] = headers["accept"]
+        return asyncio.ensure_future(self.backend.infer(payload)), False
+
+    @staticmethod
+    async def _discard_body(reader, headers) -> bool:
+        """Drain a rejected request's body so the client can read the
+        reply AND the next pipelined request starts at a clean byte
+        boundary (a closed pipe mid-upload reads as a transport error,
+        and a transport error would be retried — a shed must stay
+        typed).  False if the transport died under the read."""
         try:
             await wire.read_body(reader, headers)
+            return True
         except Exception:
-            pass
+            return False
 
 
 class ServerThread:

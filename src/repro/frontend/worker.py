@@ -20,7 +20,9 @@ Spec schema (everything optional but ``networks``):
                   {"kind": "fire", "name": "tiny", "hw": [8, 8],
                    "c_in": 16, "squeeze": 4, "expand": 8, "seed": 0}],
      "server":  {"max_wait_ms": 2.0, "max_queue": 64, "in_flight": 1},
-     "door":    {"rate": null, "burst": 64, "max_pending": null},
+     "door":    {"rate": null, "burst": 64, "max_pending": null,
+                 "weights": {"0": 3.0, "1": 1.0}},
+     "http":    {"idle_timeout_s": 30.0, "conn_inflight": 8},
      "host": "127.0.0.1", "port": 0, "drain_budget_s": 10.0}
 
 Run: ``python -m repro.frontend.worker --spec '<json>'``.  The process
@@ -101,7 +103,8 @@ def make_door(spec: dict):
         drain_budget_s=float(spec.get("drain_budget_s", DRAIN_BUDGET_S)),
         **spec.get("door", {}))
     door = FrontDoor(backend, host=spec.get("host", "127.0.0.1"),
-                     port=int(spec.get("port", 0)))
+                     port=int(spec.get("port", 0)),
+                     **spec.get("http", {}))
     return door, backend
 
 

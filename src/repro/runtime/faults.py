@@ -29,6 +29,12 @@ just as CI-testable as the in-process paths:
                          so "fail every dispatch to worker w1" is
                          expressible exactly (a fired rule looks like a
                          transport failure: the retry/ejection path runs).
+  * ``op="conn"``      — the front door's keep-alive connection loop,
+                         once per parsed request head; a fired rule is
+                         answered as a typed 500 while the SOCKET
+                         SURVIVES — the test hook for "one request on a
+                         persistent connection failed, the rest keep
+                         flowing".
 
 Faults are **deterministic**: a rule fires on an explicit trigger window
 (``after`` skips the first N matching events, ``times`` bounds how many

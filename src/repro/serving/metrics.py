@@ -57,6 +57,7 @@ class ServerMetrics:
         self.recompiles = 0                      # stale-engine recoveries
         self.swaps = 0                           # prepared-param hot-swaps
         self.shed = 0                            # Overloaded rejections
+        self.bad_requests = 0                    # malformed wire bodies (400)
         self.retries = 0                         # dispatch-failure requeues
         self.deadline_exceeded = 0               # per-request deadline misses
         self.errors = 0                          # unexpected loop errors
@@ -161,6 +162,7 @@ class ServerMetrics:
                 "recompiles": self.recompiles,
                 "swaps": self.swaps,
                 "shed": self.shed,
+                "bad_requests": self.bad_requests,
                 "retries": self.retries,
                 "deadline_exceeded": self.deadline_exceeded,
                 "errors": self.errors,

@@ -1,17 +1,23 @@
 """Process-level serving front door: wire-protocol units (unmarked, run
 in tier-1) and e2e HTTP tests (``frontend`` marker) — served rows
-bit-match the batch-1 oracle THROUGH the socket, typed rejections arrive
-as stable wire codes (429 + Retry-After / 504 / 503) instead of
-tracebacks, a killed worker process fails over without changing answers,
-and SIGTERM drains a worker to exit 0 with nothing left hanging.
+bit-match the batch-1 oracle THROUGH the socket (in BOTH wire framings,
+over keep-alive sockets), typed rejections arrive as stable wire codes
+(429 + Retry-After / 504 / 503) instead of tracebacks, weighted
+admission sheds low-priority lanes first, a killed worker process fails
+over without changing answers, the router auto-scales the fleet from
+the queue-depth gauge, and SIGTERM drains a worker to exit 0 with
+nothing left hanging.
 
 The heavy tests all serve one tiny fire module (seconds to compile,
 cached across tests); worker processes are spawned from the same spec,
 so their params — and therefore their rows — are bit-identical by
 construction (``init_network`` under the spec's seed).
 """
+import asyncio
+import http.client
 import json
 import signal
+import socket
 import time
 import urllib.error
 import urllib.request
@@ -25,7 +31,8 @@ from repro.core.graph import fire
 from repro.core.hetero import init_network
 from repro.core.partitioner import partition_network
 from repro.frontend import (FrontDoor, LocalBackend, ProcWorker, Router,
-                            ServerThread, TokenBucket, build_server, wire)
+                            ServerThread, TokenBucket,
+                            WeightedTokenBuckets, build_server, wire)
 from repro.runtime.faults import FaultPlan, FaultRule, inject
 from repro.serving.errors import (DeadlineExceeded, Overloaded, ServerClosed,
                                   ServingError, Shutdown)
@@ -121,11 +128,142 @@ def test_token_bucket_burst_and_refill():
     assert TokenBucket(rate=None).admit()  # disabled gate never sheds
 
 
+def test_retry_after_refills_from_now_not_from_last_take():
+    """The PR-10 bugfix: the bucket's time base only advanced inside
+    ``admit()``, so a probe WITHOUT traffic reported a stale (too-long,
+    or after manual token edits even zero) wait.  ``retry_after_s`` must
+    recompute the refill at call time."""
+    tb = TokenBucket(rate=10.0, burst=1)
+    assert tb.admit() and not tb.admit()   # bucket empty at t0
+    w0 = tb.retry_after_s()
+    assert 0 < w0 <= 0.1 + 1e-3            # one token at 10/s: <= 100ms
+    time.sleep(0.05)
+    w1 = tb.retry_after_s()                # NO admit() in between
+    assert w1 < w0, "wait must shrink while the bucket refills"
+    assert w1 <= 0.06
+    time.sleep(0.08)                       # fully refilled now
+    assert tb.retry_after_s() <= 0.001 + 1e-9
+    assert tb.admit()
+    # and the reported bound is honest: waiting it out buys admission
+    tb2 = TokenBucket(rate=50.0, burst=1)
+    assert tb2.admit() and not tb2.admit()
+    time.sleep(tb2.retry_after_s() + 0.005)
+    assert tb2.admit()
+
+
+def test_weighted_buckets_shed_low_priority_first():
+    wb = WeightedTokenBuckets(rate=0.001, burst=4, weights={0: 3, 1: 1})
+    # class 1 gets 1/4 of the burst (1 token), class 0 gets 3
+    assert wb.admit(priority=1) and not wb.admit(priority=1)
+    for _ in range(3):
+        assert wb.admit(priority=0), "critical lane shed too early"
+    assert not wb.admit(priority=0)
+    assert wb.retry_after_s(1) > wb.retry_after_s(0) > 0  # weighted refill
+    # unknown classes ride the LOWEST-weight bucket, never the critical one
+    assert not wb.admit(priority=7)
+    assert WeightedTokenBuckets(rate=None).admit(0)       # disabled gate
+    with pytest.raises(ValueError):
+        WeightedTokenBuckets(rate=1.0, weights={0: -1.0})
+
+
+def test_infer_request_builds_both_framings():
+    x = np.arange(12, dtype=np.float32).reshape(3, 4)
+    body, headers = wire.infer_request("tiny", x, priority=0,
+                                       deadline_ms=25.0)
+    payload = json.loads(body)
+    assert headers["X-Priority"] == "0"    # admission class rides pre-body
+    assert payload["priority"] == 0 and payload["deadline_ms"] == 25.0
+    assert np.array_equal(wire.decode_array(payload), x)
+    body, headers = wire.infer_request("tiny", x, priority=0, binary=True,
+                                       accept=wire.TENSOR_CONTENT_TYPE)
+    assert headers["Content-Type"] == wire.TENSOR_CONTENT_TYPE
+    assert headers["X-Network"] == "tiny"
+    assert np.array_equal(wire.decode_tensor(body), x)
+    meta = wire.infer_meta_from_headers(
+        {k.lower(): v for k, v in headers.items()})
+    assert meta == {"network": "tiny", "priority": 0}
+
+
+def test_router_autoscales_from_queue_depth():
+    """Tier-1 unit on stub workers: mean depth >= scale_up_depth grows
+    the fleet to the ceiling; an idle fleet shrinks back to the floor
+    through the retiring/drain path."""
+
+    class _Stub:
+        def __init__(self, name):
+            self.name = name
+            self.outstanding = 0
+            self.depth = 0
+            self.reported = 0
+            self.state = "healthy"
+            self.fails = self.oks = self.restarts = 0
+            self.restarting = False
+            self.drained = False
+
+        def alive(self):
+            return True
+
+        async def healthz(self):
+            return 200, {"ok": True, "pending_requests": self.reported,
+                         "queue_total": 0}, {}
+
+        async def drain(self, budget_s):
+            self.drained = True
+
+        def terminate(self):
+            pass
+
+    async def run():
+        made = []
+
+        def factory(name):
+            w = _Stub(name)
+            made.append(w)
+            return w
+
+        seed = _Stub("w0")
+        r = Router([seed], worker_factory=factory, scale_min=1,
+                   scale_max=3, scale_up_depth=5.0, scale_down_depth=0.5,
+                   scale_cooldown_s=0.0, probe_interval_s=0.005)
+        assert r.autoscale_enabled()
+        await r.start()
+        seed.reported = 50                    # saturated: scale up
+        deadline = time.monotonic() + 5.0
+        while len(r.workers) < 3 and time.monotonic() < deadline:
+            for w in r.workers:
+                w.reported = 50
+            await asyncio.sleep(0.01)
+        assert len(r.workers) == 3, "never reached the ceiling"
+        assert r.counters["scale_ups"] == 2
+        await asyncio.sleep(0.05)
+        assert len(r.workers) == 3, "scaled past the ceiling"
+        for w in r.workers:                   # idle: scale back down
+            w.reported = 0
+        deadline = time.monotonic() + 5.0
+        while len(r.workers) > 1 and time.monotonic() < deadline:
+            await asyncio.sleep(0.01)
+        assert len(r.workers) == 1, "never shrank back to the floor"
+        assert r.counters["scale_downs"] == 2
+        await asyncio.sleep(0.05)
+        assert len(r.workers) == 1, "shrank below the floor"
+        assert all(w.drained for w in made if w not in r.workers), \
+            "a retired worker was killed without draining"
+        await r.aclose()
+
+    asyncio.run(run())
+
+
 # --- e2e over HTTP ----------------------------------------------------------
 
-def _door(**door_kw):
+def _door(idle_timeout_s=None, conn_inflight=None, **door_kw):
     server = build_server(SPEC)
-    handle = ServerThread(FrontDoor(LocalBackend(server, **door_kw)))
+    fd_kw = {}
+    if idle_timeout_s is not None:
+        fd_kw["idle_timeout_s"] = idle_timeout_s
+    if conn_inflight is not None:
+        fd_kw["conn_inflight"] = conn_inflight
+    handle = ServerThread(FrontDoor(LocalBackend(server, **door_kw),
+                                    **fd_kw))
     return server, handle.start()
 
 
@@ -235,6 +373,179 @@ def test_drain_fences_resolves_and_is_idempotent():
         assert server.state == "closed"
     finally:
         h.stop(drain=False)
+
+
+# --- protocol v2 e2e: keep-alive, binary framing, weighted admission --------
+
+@pytest.mark.frontend
+def test_keepalive_socket_serves_many_bitmatched_rows(oracle):
+    """One persistent connection, many requests: every row bit-matches
+    the oracle, the door saw ONE connection, and responses carry
+    ``Connection: keep-alive``."""
+    _server, h = _door()
+    try:
+        conn = http.client.HTTPConnection("127.0.0.1", h.port, timeout=60)
+        imgs = _images(5, seed=11)
+        for x in imgs:
+            body, headers = wire.infer_request("tiny", x)
+            conn.request("POST", "/v1/infer", body=body, headers=headers)
+            r = conn.getresponse()
+            assert r.status == 200
+            assert r.getheader("Connection") == "keep-alive"
+            row = wire.decode_array(json.loads(r.read())["result"])
+            assert np.array_equal(row, oracle(x))
+        assert h.door.connections == 1
+        assert h.door.keepalive_reuses == len(imgs) - 1
+        conn.close()
+    finally:
+        h.stop()
+
+
+@pytest.mark.frontend
+def test_binary_framing_bitmatches_base64_framing(oracle):
+    """The same image served through both framings — and a mixed
+    round-trip (binary request, JSON reply and vice versa) — produces
+    bit-identical rows: the encodings are interchangeable codecs, not
+    two numerics paths."""
+    _server, h = _door()
+    try:
+        conn = http.client.HTTPConnection("127.0.0.1", h.port, timeout=60)
+        for x in _images(3, seed=7):
+            rows = {}
+            for label, binary, accept in (
+                    ("b64/b64", False, None),
+                    ("bin/bin", True, wire.TENSOR_CONTENT_TYPE),
+                    ("bin/b64", True, None),
+                    ("b64/bin", False, wire.TENSOR_CONTENT_TYPE)):
+                body, headers = wire.infer_request("tiny", x, binary=binary,
+                                                   accept=accept)
+                conn.request("POST", "/v1/infer", body=body,
+                             headers=headers)
+                r = conn.getresponse()
+                raw = r.read()
+                assert r.status == 200, raw[:200]
+                ctype = r.getheader("Content-Type", "")
+                if accept:
+                    assert ctype.startswith(wire.TENSOR_CONTENT_TYPE)
+                    rows[label] = wire.decode_tensor(raw)
+                else:
+                    rows[label] = wire.decode_array(
+                        json.loads(raw)["result"])
+            ref = oracle(x)
+            for label, row in rows.items():
+                assert row.dtype == ref.dtype, label
+                assert np.array_equal(row, ref), \
+                    f"framing {label} changed the served row"
+        conn.close()
+    finally:
+        h.stop()
+
+
+@pytest.mark.frontend
+def test_weighted_admission_sheds_low_priority_lane_first():
+    """Exhaust the door's buckets: the class-1 lane sheds while the
+    deadline-critical class-0 lane (weight 3) still admits."""
+    server, h = _door(rate=0.001, burst=4, weights={0: 3, 1: 1})
+    try:
+        def infer(prio):
+            x = _images(1)[0]
+            body, headers = wire.infer_request("tiny", x, priority=prio)
+            conn = http.client.HTTPConnection("127.0.0.1", h.port,
+                                              timeout=60)
+            conn.request("POST", "/v1/infer", body=body, headers=headers)
+            r = conn.getresponse()
+            out = r.status, json.loads(r.read()), dict(r.headers)
+            conn.close()
+            return out
+
+        assert infer(1)[0] == 200              # class-1 burst: 1 token
+        status, body, headers = infer(1)
+        assert status == 429 and body["error"] == "overloaded"
+        assert float(headers["Retry-After"]) > 0
+        for _ in range(3):                     # class-0 burst: 3 tokens
+            assert infer(0)[0] == 200, \
+                "critical lane shed while it still had budget"
+        assert infer(0)[0] == 429
+        status, hz = _get(h.port, "/healthz")
+        assert hz["sheds_by_class"].get("1") == 1
+        assert hz["sheds_by_class"].get("0") == 1
+        assert server.metrics.snapshot()["completed"] == 4
+    finally:
+        h.stop()
+
+
+@pytest.mark.frontend
+def test_conn_fault_is_typed_and_socket_survives(oracle):
+    """``op="conn"`` fires once on a keep-alive socket: that request
+    answers a typed 500 and the SAME socket keeps serving."""
+    _server, h = _door()
+    try:
+        conn = http.client.HTTPConnection("127.0.0.1", h.port, timeout=60)
+        x = _images(1, seed=5)[0]
+        body, headers = wire.infer_request("tiny", x)
+        plan = FaultPlan([FaultRule(op="conn", times=1)])
+        with inject(plan):
+            conn.request("POST", "/v1/infer", body=body, headers=headers)
+            r = conn.getresponse()
+            reply = json.loads(r.read())
+            assert r.status == 500 and reply["error"] == "internal"
+            assert plan.rules[0].fired == 1
+            conn.request("POST", "/v1/infer", body=body, headers=headers)
+            r = conn.getresponse()
+            assert r.status == 200
+            row = wire.decode_array(json.loads(r.read())["result"])
+        assert np.array_equal(row, oracle(x))
+        assert h.door.connections == 1, "the typed failure burned the socket"
+        conn.close()
+    finally:
+        h.stop()
+
+
+@pytest.mark.frontend
+def test_idle_keepalive_socket_is_closed_and_counted():
+    _server, h = _door(idle_timeout_s=0.3)
+    try:
+        with socket.create_connection(("127.0.0.1", h.port),
+                                      timeout=10) as s:
+            s.settimeout(5.0)
+            assert s.recv(1) == b"", "idle socket never closed"
+    finally:
+        h.stop()
+
+
+@pytest.mark.frontend
+def test_pipelined_requests_answer_in_order(oracle):
+    """Two infer requests written back-to-back before reading either
+    response: both answer 200, in request order, on one socket."""
+    _server, h = _door()
+    try:
+        imgs = _images(2, seed=9)
+        reqs = b""
+        for x in imgs:
+            body, headers = wire.infer_request("tiny", x)
+            hdr = "".join(f"{k}: {v}\r\n" for k, v in headers.items())
+            reqs += (f"POST /v1/infer HTTP/1.1\r\nHost: x\r\n"
+                     f"Content-Length: {len(body)}\r\n{hdr}\r\n"
+                     ).encode() + body
+        with socket.create_connection(("127.0.0.1", h.port),
+                                      timeout=30) as s:
+            s.sendall(reqs + b"")
+            s.settimeout(30.0)
+            blob = b""
+            while blob.count(b"HTTP/1.1 ") < 2 or not blob.endswith(b"}"):
+                chunk = s.recv(65536)
+                if not chunk:
+                    break
+                blob += chunk
+        parts = blob.split(b"HTTP/1.1 ")[1:]
+        assert len(parts) == 2
+        for x, part in zip(imgs, parts):
+            assert part.startswith(b"200 ")
+            payload = json.loads(part.split(b"\r\n\r\n", 1)[1])
+            assert np.array_equal(wire.decode_array(payload["result"]),
+                                  oracle(x)), "pipelined answers misordered"
+    finally:
+        h.stop()
 
 
 # --- multi-process: failover, crash-resume, SIGTERM -------------------------
